@@ -1,0 +1,74 @@
+"""Shared benchmark plumbing: CSV emission + standard FL setup."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+import numpy as np
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    """Return (result_of_last_call, mean_us)."""
+    fn(*args, **kw)                      # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeats * 1e6
+    return out, us
+
+
+def standard_fl_setup(n_ues: int = 10, l: int = 4, a: int = 3, s: int = 3,
+                      seed: int = 0, dataset: str = "mnist",
+                      conflict: bool = False):
+    """``conflict=True`` uses per-client label permutations — the regime
+    where a single global model cannot fit everyone and PFL's advantage
+    exists (matches the paper's strongly heterogeneous real datasets)."""
+    import numpy as np
+
+    from repro.config import ExperimentConfig, FLConfig
+    from repro.configs import get_config
+    from repro.data import partition_noniid, synthetic_mnist
+    from repro.data.partition import ClientDataset, sequence_clients
+    from repro.data.synthetic import (conflicting_label_clients,
+                                      synthetic_shakespeare)
+    from repro.models import build_model
+
+    if dataset == "shakespeare":
+        model_cfg = get_config("char_lstm")
+        clients = sequence_clients(
+            synthetic_shakespeare(n_roles=n_ues, chars_per_role=800),
+            n_ues, seed=seed)
+        alpha, beta = 0.03, 0.07
+    elif conflict:
+        model_cfg = get_config("mnist_dnn")
+        shards = conflicting_label_clients(n_ues, n_per_client=250, n_swap=6,
+                                           seed=seed)
+        clients = []
+        for ci, d in enumerate(shards):
+            n_test = len(d["y"]) // 5
+            clients.append(ClientDataset(
+                data={k: v[n_test:] for k, v in d.items()},
+                test={k: v[:n_test] for k, v in d.items()},
+                labels_held=np.unique(d["y"]),
+                rng=np.random.default_rng(seed * 100 + ci)))
+        alpha, beta = 0.03, 0.07
+    else:
+        model_cfg = get_config("mnist_dnn")
+        clients = partition_noniid(synthetic_mnist(n=2500, seed=seed),
+                                   n_ues, l=l, seed=seed)
+        alpha, beta = 0.03, 0.07
+    cfg = ExperimentConfig(
+        model=model_cfg,
+        fl=FLConfig(n_ues=n_ues, participants_per_round=a, staleness_bound=s,
+                    alpha=alpha, beta=beta, inner_batch=16, outer_batch=16,
+                    hessian_batch=16))
+    model = build_model(cfg.model)
+    return cfg, model, clients

@@ -1,0 +1,28 @@
+"""Ablation: exact Eq.-7 meta-gradient vs the first-order (FO) variant.
+
+This closes the loop on the §Perf FO lever — FO saves ~46% compute at scale
+(see EXPERIMENTS.md §Perf Pair C); here we measure what it costs in
+convergence on the paper-scale simulation.  (Per-FedAvg's own experiments
+report FO within a small gap of exact HVP; we reproduce that.)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, standard_fl_setup
+
+
+def run() -> None:
+    from repro.fl.simulation import run_simulation
+
+    for first_order in (False, True):
+        cfg, model, clients = standard_fl_setup(n_ues=10, a=3, l=2)
+        cfg = dataclasses.replace(
+            cfg, fl=dataclasses.replace(cfg.fl, first_order=first_order))
+        res = run_simulation(cfg, model, clients, algorithm="perfed",
+                             mode="semi", max_rounds=25, eval_every=25,
+                             seed=0)
+        us = res.total_time / max(res.rounds[-1], 1) * 1e6
+        tag = "first_order" if first_order else "exact_hvp"
+        emit(f"ablation/perfed-{tag}", us,
+             f"ploss={res.losses[-1]:.4f};gloss={res.global_losses[-1]:.4f}")

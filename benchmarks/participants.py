@@ -1,0 +1,23 @@
+"""Fig. 8/9 — PerFedS² vs the number of participants per round A,
+under equal and distance-derived η."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, standard_fl_setup
+
+
+def run() -> None:
+    from repro.fl.simulation import run_simulation
+
+    for eta_mode in ("equal", "distance"):
+        for a in (3, 5, 8):
+            cfg, model, clients = standard_fl_setup(n_ues=10, a=a)
+            cfg = dataclasses.replace(
+                cfg, fl=dataclasses.replace(cfg.fl, eta_mode=eta_mode))
+            res = run_simulation(cfg, model, clients, algorithm="perfed",
+                                 mode="semi", max_rounds=20, eval_every=20,
+                                 seed=0)
+            us = res.total_time / max(res.rounds[-1], 1) * 1e6
+            emit(f"fig8-9/{eta_mode}/A={a}", us,
+                 f"ploss={res.losses[-1]:.4f};sim_T={res.total_time:.2f}s")

@@ -1,0 +1,62 @@
+"""§Roofline — read the dry-run artifacts and report the three terms per
+(arch × shape × mesh): compute / memory / collective seconds + dominant
+bottleneck + MODEL_FLOPS utilisation ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+# 6·N·D parameters (N = total params; N_active for MoE) — derived from the
+# configs; used for the MODEL_FLOPS / HLO_FLOPs "useful compute" ratio.
+PARAMS = {  # (total, active) in billions
+    "starcoder2_15b": (15.2, 15.2),
+    "mixtral_8x22b": (141.0, 39.0),
+    "deepseek_67b": (67.4, 67.4),
+    "mamba2_370m": (0.37, 0.37),
+    "musicgen_large": (3.3, 3.3),
+    "llama32_vision_11b": (10.7, 10.7),
+    "deepseek_v2_236b": (236.0, 21.0),
+    "nemotron4_15b": (15.0, 15.0),
+    "yi_6b": (6.1, 6.1),
+    "recurrentgemma_2b": (2.7, 2.7),
+}
+
+TOKENS = {"train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+          "decode_32k": 128, "long_500k": 1}
+
+
+def run() -> None:
+    files = sorted(glob.glob(os.path.join(ART, "baseline_*.json")))
+    if not files:
+        emit("roofline/missing", 0.0,
+             f"no artifacts in {ART}; run: python -m repro.launch.dryrun")
+        return
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        if rec.get("status") != "ok":
+            emit(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}", 0.0,
+                 f"FAILED:{rec.get('error', '?')[:80]}")
+            continue
+        from repro.launch.roofline import roofline_report
+        r = roofline_report(rec)    # recompute with current term formulas
+        arch, shape = rec["arch"], rec["shape"]
+        total_b, active_b = PARAMS.get(arch, (0, 0))
+        chips = rec.get("n_devices", 1)
+        # HLO flops are per-device; model flops per device = 6·N_active·D/chips
+        # (train counts fwd+bwd ⇒ 6ND; decode fwd-only ⇒ 2ND)
+        mult = 6.0 if rec.get("kind") == "train" else 2.0
+        model_fl = mult * active_b * 1e9 * TOKENS.get(shape, 1) / chips
+        hlo_fl = rec.get("hlo_tc", {}).get("dot_flops_tc") or rec.get("flops")
+        ratio = model_fl / hlo_fl if hlo_fl else 0.0
+        emit(f"roofline/{arch}/{shape}/{rec['mesh']}",
+             rec.get("compile_s", 0.0) * 1e6,
+             f"compute={r['compute_s']:.3e}s;memory={r['memory_s']:.3e}s;"
+             f"collective={r['collective_s']:.3e}s;dominant={r['dominant']};"
+             f"model_flops_ratio={ratio:.3f};"
+             f"peak_GiB={rec['memory']['peak_bytes']/2**30:.2f}")

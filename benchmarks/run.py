@@ -1,0 +1,48 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``us_per_call`` is the mean
+wall time of one unit of work (an FL round / a kernel call); ``derived``
+carries the figure's headline quantity (final loss, simulated time, roofline
+term, ...).
+
+Run all:      PYTHONPATH=src python -m benchmarks.run
+Run a subset: PYTHONPATH=src python -m benchmarks.run convergence staleness
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+SUITES = [
+    "convergence",       # Fig. 3/4/5 — 6+ algorithms, loss vs simulated time
+    "semi_variants",     # Fig. 6 — FedAvgS², FedProxS², PerFedS²
+    "noniid",            # Fig. 7 — non-iid level l sweep
+    "participants",      # Fig. 8/9 — A sweep
+    "staleness",         # Fig. 10 — S sweep
+    "bandwidth",         # Thm. 2/4 — allocation policies
+    "fo_ablation",       # exact Eq.-7 HVP vs first-order variant
+    "kernels",           # Pallas kernels vs oracles
+    "roofline",          # §Roofline — from dry-run artifacts
+]
+
+
+def main() -> None:
+    which = sys.argv[1:] or SUITES
+    header = "name,us_per_call,derived"
+    print(header, flush=True)
+    failures = []
+    for suite in which:
+        try:
+            mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
+            mod.run()
+        except Exception as e:  # noqa: BLE001
+            failures.append((suite, e))
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} suite(s) failed: "
+              f"{[s for s, _ in failures]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Fig. 10 — PerFedS² vs the staleness threshold S (equal η, A=5)."""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, standard_fl_setup
+
+
+def run() -> None:
+    from repro.fl.simulation import run_simulation
+
+    for s in (1, 2, 3, 4, 5):
+        cfg, model, clients = standard_fl_setup(n_ues=10, a=5, s=s)
+        res = run_simulation(cfg, model, clients, algorithm="perfed",
+                             mode="semi", max_rounds=20, eval_every=20,
+                             seed=0)
+        from repro.core.scheduler import schedule_staleness
+        us = res.total_time / max(res.rounds[-1], 1) * 1e6
+        tau = schedule_staleness(res.pi)
+        emit(f"fig10/S={s}", us,
+             f"ploss={res.losses[-1]:.4f};sim_T={res.total_time:.2f}s;"
+             f"max_stale={int(tau.max())}")

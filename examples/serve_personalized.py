@@ -1,0 +1,65 @@
+"""Serve a small model with batched requests — with per-user personalization.
+
+Per-FedAvg's deployment story: the trained meta-initialisation is adapted
+with ONE gradient step on each user's data before serving.  This example
+serves two users whose "dialects" differ (different token statistics) and
+shows the adapted models' losses beating the shared meta model on each
+user's own stream.
+
+    PYTHONPATH=src python examples/serve_personalized.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.perfed import adapt
+from repro.data.synthetic import synthetic_lm_corpus
+from repro.models import build_model
+
+cfg = dataclasses.replace(get_config("yi_6b").reduced(), vocab_size=512)
+model = build_model(cfg)
+rng = jax.random.PRNGKey(0)
+params = model.init(rng)
+
+# two users with different bigram statistics
+users = [synthetic_lm_corpus(4096, vocab=cfg.vocab_size, seed=s)
+         for s in (10, 11)]
+
+def batch_from(corpus, n=8, l=64, off=0):
+    toks = np.stack([corpus[i * l + off:(i + 1) * l + off] for i in range(n)])
+    targ = np.stack([corpus[i * l + 1 + off:(i + 1) * l + 1 + off]
+                     for i in range(n)])
+    return {"tokens": jnp.asarray(toks), "targets": jnp.asarray(targ)}
+
+loss_fn = jax.jit(lambda p, b: model.loss(p, b)[0])
+print(f"{'user':>4s} {'meta loss':>10s} {'adapted':>10s}")
+adapted_params = []
+for ui, corpus in enumerate(users):
+    support = batch_from(corpus, off=0)
+    query = batch_from(corpus, off=2048)
+    l_meta = float(loss_fn(params, query))
+    p_ad = adapt(model.loss, params, support, alpha=0.05)
+    adapted_params.append(p_ad)
+    l_ad = float(loss_fn(p_ad, query))
+    print(f"{ui:4d} {l_meta:10.4f} {l_ad:10.4f}")
+
+# batched serving loop with the personalized weights
+prefill = jax.jit(lambda p, t: model.prefill(p, t, 128))
+decode = jax.jit(model.decode_step)
+prompts = batch_from(users[0], n=4, l=32)["tokens"]
+t0 = time.time()
+logits, cache = prefill(adapted_params[0], prompts)
+tok = jnp.argmax(logits, -1).reshape(4, 1).astype(jnp.int32)
+out = [tok]
+for i in range(15):
+    logits, cache = decode(adapted_params[0], cache, tok, jnp.int32(32 + i))
+    tok = jnp.argmax(logits, -1).reshape(4, 1).astype(jnp.int32)
+    out.append(tok)
+jax.block_until_ready(tok)
+gen = jnp.concatenate(out, 1)
+print(f"\nbatched serve: 4 requests × 16 tokens in {time.time()-t0:.2f}s")
+print("sample:", np.asarray(gen)[0].tolist())

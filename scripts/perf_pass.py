@@ -1,0 +1,93 @@
+"""§Perf hillclimb driver: run a (arch × shape) case with a set of levers and
+print the before/after roofline comparison against the tagged baseline.
+
+    PYTHONPATH=src python scripts/perf_pass.py deepseek_v2_236b train_4k \
+        --opt moe_ep --tag perf1 [--mesh single_pod]
+
+Reads the baseline record from artifacts/dryrun/baseline_<case>.json.
+"""
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# must happen before any jax usage — dryrun sets XLA_FLAGS on import
+from repro.launch import dryrun  # noqa: E402
+
+
+def fmt(x):
+    return f"{x:.3e}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--opt", action="append", default=[],
+                    choices=list(dryrun.OPT_LEVERS))
+    ap.add_argument("--moe-impl", default="gather")
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod"])
+    ap.add_argument("--tag", default="perf")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    base_f = os.path.join(
+        args.out, f"baseline_{args.arch}_{args.shape}_"
+        f"{'multi' if args.mesh == 'multi_pod' else 'single'}.json")
+    base = json.load(open(base_f)) if os.path.exists(base_f) else None
+    if base is not None:
+        # recompute with the CURRENT term formulas (apples-to-apples)
+        from repro.launch.roofline import roofline_report
+        base["roofline"] = roofline_report(base)
+
+    rec = dryrun.run_case(args.arch, args.shape,
+                          multi_pod=(args.mesh == "multi_pod"),
+                          moe_impl=args.moe_impl, opts=tuple(args.opt))
+    rec["tag"] = args.tag
+    rec["opts"] = list(args.opt)
+    out_f = os.path.join(
+        args.out, f"{args.tag}_{args.arch}_{args.shape}_"
+        f"{'multi' if args.mesh == 'multi_pod' else 'single'}.json")
+    os.makedirs(args.out, exist_ok=True)
+    with open(out_f, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    if rec["status"] != "ok":
+        print("FAILED:", rec.get("error"))
+        print(rec.get("traceback", "")[-2000:])
+        sys.exit(1)
+
+    print(f"\n=== {args.arch} × {args.shape} × {args.mesh} "
+          f"opts={args.opt or ['(baseline)']} ===")
+    hdr = f"{'metric':26s} {'baseline':>12s} {'optimized':>12s} {'delta':>8s}"
+    print(hdr)
+    print("-" * len(hdr))
+
+    def row(name, get):
+        b = get(base) if base else float("nan")
+        o = get(rec)
+        delta = (o - b) / b * 100 if base and b else float("nan")
+        print(f"{name:26s} {fmt(b):>12s} {fmt(o):>12s} {delta:+7.1f}%")
+
+    row("compute_s", lambda r: r["roofline"]["compute_s"])
+    row("memory_s", lambda r: r["roofline"]["memory_s"])
+    row("collective_s", lambda r: r["roofline"]["collective_s"])
+    row("dot_flops_tc", lambda r: r["hlo_tc"]["dot_flops_tc"])
+    row("bytes_estimate_tc", lambda r: r["hlo_tc"]["bytes_estimate_tc"])
+    row("collective_total_tc", lambda r: r["hlo_tc"]["collective_total_tc"])
+    row("peak_bytes", lambda r: float(r["memory"]["peak_bytes"]))
+    print(f"{'dominant':26s} "
+          f"{(base or {}).get('roofline', {}).get('dominant', '?'):>12s} "
+          f"{rec['roofline']['dominant']:>12s}")
+    if base:
+        bc = base.get("hlo_tc", {}).get("collective_count_tc", {})
+        oc = rec.get("hlo_tc", {}).get("collective_count_tc", {})
+        print(f"\ncollective counts (tc): baseline={bc}")
+        print(f"                        optimized={oc}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Dependency-free pytree checkpointing (.npz + structure descriptor).
+
+Arrays are gathered to host and stored in a single compressed npz; the pytree
+structure is recorded as a flat list of '/'-joined key paths so restore
+round-trips nested dicts / lists / NamedTuple-like structures of arrays.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any):
+    """Flatten to {path: np.array}; bf16 (not a numpy dtype) is stored as a
+    uint16 bit-view with the true dtype recorded separately."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves, treedef = flat
+    out = {}
+    dtypes: Dict[str, str] = {}
+    for path, leaf in leaves:
+        key = "/".join(_part(p) for p in path)
+        arr = jnp.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            dtypes[key] = "bfloat16"
+            out[key] = np.asarray(arr.view(jnp.uint16))
+        else:
+            out[key] = np.asarray(arr)
+    return out, treedef, dtypes
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"#{p.idx}"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save_checkpoint(path: str, tree: Any, *, step: Optional[int] = None,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    """Save a pytree of arrays. ``path`` is a directory; returns the file."""
+    os.makedirs(path, exist_ok=True)
+    arrays, _, dtypes = _flatten(tree)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz" if step is not None
+                         else "ckpt.npz")
+    meta = {"keys": sorted(arrays), "step": step, "extra": extra or {},
+            "dtypes": dtypes}
+    np.savez_compressed(fname, __meta__=json.dumps(meta), **arrays)
+    return fname
+
+
+def load_checkpoint(fname: str, like: Any = None) -> Any:
+    """Restore. With ``like`` given, arrays are poured into its structure
+    (dtype/shape-checked); otherwise returns a nested dict."""
+    with np.load(fname, allow_pickle=False) as z:
+        meta = json.loads(str(z["__meta__"]))
+        arrays = {}
+        for k in meta["keys"]:
+            a = z[k]
+            if meta.get("dtypes", {}).get(k) == "bfloat16":
+                a = jnp.asarray(a).view(jnp.bfloat16)
+            arrays[k] = a
+    if like is None:
+        root: Dict[str, Any] = {}
+        for key, arr in arrays.items():
+            node = root
+            parts = key.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = jnp.asarray(arr)
+        return root
+    flat_like, treedef, _ = _flatten(like)
+    missing = set(flat_like) - set(arrays)
+    if missing:
+        raise ValueError(f"checkpoint missing keys: {sorted(missing)[:5]} ...")
+    leaves_like, td = jax.tree_util.tree_flatten(like)
+    paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    new_leaves = []
+    for (path, leaf) in paths:
+        key = "/".join(_part(p) for p in path)
+        arr = arrays[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        new_leaves.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(td, new_leaves)
+
+
+def latest_checkpoint(path: str) -> Optional[str]:
+    if not os.path.isdir(path):
+        return None
+    pat = re.compile(r"ckpt_(\d+)\.npz$")
+    best, best_step = None, -1
+    for f in os.listdir(path):
+        m = pat.match(f)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(path, f), int(m.group(1))
+    if best is None and os.path.exists(os.path.join(path, "ckpt.npz")):
+        return os.path.join(path, "ckpt.npz")
+    return best

@@ -1,0 +1,61 @@
+"""Config registry: ``--arch <id>`` → ModelConfig, plus the 4 input shapes."""
+from __future__ import annotations
+
+import importlib
+
+from repro.config import ModelConfig, ShapeConfig
+
+ARCH_IDS = (
+    "starcoder2_15b",
+    "mixtral_8x22b",
+    "deepseek_67b",
+    "mamba2_370m",
+    "musicgen_large",
+    "llama32_vision_11b",
+    "deepseek_v2_236b",
+    "nemotron4_15b",
+    "yi_6b",
+    "recurrentgemma_2b",
+    # the paper's own models
+    "mnist_dnn",
+    "lenet5",
+    "char_lstm",
+)
+
+# canonical hyphenated ids from the assignment → module names
+ALIASES = {
+    "starcoder2-15b": "starcoder2_15b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "deepseek-67b": "deepseek_67b",
+    "mamba2-370m": "mamba2_370m",
+    "musicgen-large": "musicgen_large",
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "nemotron-4-15b": "nemotron4_15b",
+    "yi-6b": "yi_6b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+}
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", seq_len=4096, global_batch=256,
+                            kind="train"),
+    "prefill_32k": ShapeConfig("prefill_32k", seq_len=32768, global_batch=32,
+                               kind="prefill"),
+    "decode_32k": ShapeConfig("decode_32k", seq_len=32768, global_batch=128,
+                              kind="decode"),
+    "long_500k": ShapeConfig("long_500k", seq_len=524288, global_batch=1,
+                             kind="decode"),
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch).replace("-", "_")
+    if mod_name not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch!r}; have {sorted(ARCH_IDS)} "
+                         f"(aliases: {sorted(ALIASES)})")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]

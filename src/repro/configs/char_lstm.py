@@ -1,0 +1,12 @@
+"""Paper model: LSTM next-character classifier for Shakespeare (Sec. VI-A)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="char_lstm",
+    family="small",
+    num_layers=1,
+    d_model=256,                # LSTM hidden
+    vocab_size=80,              # LEAF Shakespeare charset
+    dtype="float32",
+    source="paper Sec. VI-A (Shakespeare), LEAF benchmark",
+)

@@ -1,0 +1,19 @@
+"""DeepSeek-67B — dense llama-arch, GQA (64H/8KV). [arXiv:2401.02954]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=22016,
+    vocab_size=102400,
+    max_seq_len=4096,
+    attention="gqa",
+    rope_theta=1e4,
+    activation="silu",
+    long_context_window=4096,
+    source="arXiv:2401.02954",
+)

@@ -1,0 +1,24 @@
+"""DeepSeek-V2-236B — MLA (kv_lora 512) + MoE 160 routed top-6 + 2 shared.
+[arXiv:2405.04434]"""
+from repro.config import ModelConfig, MoEConfig, MLAConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,           # MLA: all heads share the latent cache
+    d_ff=1536,                  # routed expert width
+    vocab_size=102400,
+    max_seq_len=131072,
+    attention="mla",
+    rope_theta=1e4,
+    activation="silu",
+    moe=MoEConfig(num_experts=160, experts_per_token=6, num_shared_experts=2,
+                  expert_d_ff=1536),
+    mla=MLAConfig(kv_lora_rank=512, q_lora_rank=1536, qk_rope_head_dim=64,
+                  qk_nope_head_dim=128, v_head_dim=128),
+    long_context_window=4096,
+    source="arXiv:2405.04434",
+)

@@ -1,0 +1,12 @@
+"""Paper model: LeNet-5 for CIFAR-100 (Sec. VI-A)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="lenet5",
+    family="small",
+    num_layers=5,
+    d_model=120,
+    vocab_size=100,             # classes
+    dtype="float32",
+    source="paper Sec. VI-A (CIFAR-100), LeCun et al. 1998",
+)

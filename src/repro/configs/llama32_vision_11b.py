@@ -1,0 +1,22 @@
+"""Llama-3.2-11B-Vision — text decoder w/ cross-attn image layers
+(vision frontend stubbed).  [hf:meta-llama/Llama-3.2-11B-Vision]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    num_layers=40,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    max_seq_len=131072,
+    attention="gqa",
+    rope_theta=5e5,
+    activation="silu",
+    cross_attn_every=5,         # 8 cross-attention layers over 40 self layers
+    num_image_tokens=1601,      # 1 tile × (40×40 patches + 1 cls)
+    long_context_window=4096,
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

@@ -1,0 +1,18 @@
+"""Mamba2-370M — attention-free SSD (state-space duality). [arXiv:2405.21060]"""
+from repro.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-370m",
+    family="ssm",
+    num_layers=48,
+    d_model=1024,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,                     # attention-free, no separate FFN (Mamba block only)
+    vocab_size=50280,
+    max_seq_len=1048576,
+    attention="none",
+    ssm=SSMConfig(state_dim=128, head_dim=64, expand=2, chunk_size=256,
+                  conv_width=4),
+    source="arXiv:2405.21060",
+)

@@ -1,0 +1,21 @@
+"""Mixtral-8x22B — MoE 8 experts top-2, GQA (48H/8KV), SWA. [arXiv:2401.04088]"""
+from repro.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    max_seq_len=65536,
+    attention="gqa",
+    rope_theta=1e6,
+    sliding_window=4096,        # native SWA → long_500k runs natively
+    long_context_window=4096,
+    activation="silu",
+    moe=MoEConfig(num_experts=8, experts_per_token=2, expert_d_ff=16384),
+    source="arXiv:2401.04088",
+)

@@ -1,0 +1,12 @@
+"""Paper model: 2-layer DNN with hidden size 100 for MNIST (Sec. VI-A)."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mnist_dnn",
+    family="small",
+    num_layers=2,
+    d_model=100,                # hidden width
+    vocab_size=10,              # classes
+    dtype="float32",
+    source="paper Sec. VI-A (MNIST)",
+)

@@ -1,0 +1,20 @@
+"""MusicGen-Large — decoder-only over EnCodec tokens (codec stubbed).
+[arXiv:2306.05284]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    family="audio",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,            # full MHA
+    d_ff=8192,
+    vocab_size=2048,            # per-codebook EnCodec codebook size
+    max_seq_len=32768,
+    attention="gqa",
+    activation="gelu",
+    num_audio_codebooks=4,
+    long_context_window=4096,
+    source="arXiv:2306.05284",
+)

@@ -1,0 +1,19 @@
+"""Nemotron-4-15B — dense, GQA (48H/8KV), squared-ReLU MLP. [arXiv:2402.16819]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=256000,
+    max_seq_len=4096,
+    attention="gqa",
+    rope_theta=1e4,
+    activation="sq_relu",       # squared-ReLU, non-gated MLP
+    long_context_window=4096,
+    source="arXiv:2402.16819",
+)

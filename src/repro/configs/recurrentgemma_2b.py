@@ -1,0 +1,21 @@
+"""RecurrentGemma-2B — RG-LRU + local attention (2 recurrent : 1 attn).
+[arXiv:2402.19427]"""
+from repro.config import ModelConfig, HybridConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    num_layers=26,
+    d_model=2560,
+    num_heads=10,
+    num_kv_heads=1,             # MQA for the local-attention blocks
+    d_ff=7680,
+    vocab_size=256000,
+    max_seq_len=1048576,        # unbounded in principle (fixed-size state)
+    attention="gqa",
+    rope_theta=1e4,
+    activation="gelu",
+    hybrid=HybridConfig(lru_width=2560, attention_window=2048,
+                        pattern=("rglru", "rglru", "attn")),
+    source="arXiv:2402.19427",
+)

@@ -1,0 +1,19 @@
+"""StarCoder2-15B — dense, GQA (48H/4KV), RoPE. [arXiv:2402.19173]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    d_ff=24576,
+    vocab_size=49152,
+    max_seq_len=16384,
+    attention="gqa",
+    rope_theta=1e5,
+    activation="gelu",
+    long_context_window=4096,   # sliding-window variant for long_500k
+    source="arXiv:2402.19173",
+)

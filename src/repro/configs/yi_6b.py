@@ -1,0 +1,19 @@
+"""Yi-6B — dense llama-arch, GQA (32H/4KV). [arXiv:2403.04652]"""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    max_seq_len=4096,
+    attention="gqa",
+    rope_theta=5e6,
+    activation="silu",
+    long_context_window=4096,
+    source="arXiv:2403.04652",
+)

@@ -1,0 +1,6 @@
+# The paper's primary contribution: PerFedS² — semi-synchronous personalized
+# federated averaging with joint bandwidth allocation + UE scheduling.
+from repro.core.perfed import perfed_grad, perfed_loss, adapt, perfed_grad_exact
+from repro.core.scheduler import greedy_schedule, relative_frequencies, estimate_A_K
+from repro.core.bandwidth import optimal_bandwidth, lambertw
+from repro.core.convergence import fosp_bound, step_condition

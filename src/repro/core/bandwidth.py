@@ -1,0 +1,237 @@
+"""Optimal bandwidth allocation — Sec. V-B (Theorems 2–4) of the paper.
+
+Core facts implemented here:
+
+* Theorem 2: within a round, the round time is minimised iff all scheduled
+  UEs finish simultaneously (uplink rate is monotone in bandwidth, so any
+  slack is re-assignable to the slowest UE).
+* Theorem 4: the per-UE bandwidth that hits a finish time ``t`` has the
+  closed form  b = −q·Γ / (W₋₁(−Γ e^{−Γ}) + Γ),  Γ = Z·N₀ /((t−Tcmp)·p·h·d^{−κ}),
+  with W the Lambert-W function; any allocation between the two extreme
+  policies (only-A_k vs all-UE weighted-equal-rate) attains the same optimum.
+
+Everything is host-side numpy (the allocator runs in the round loop of the
+simulator, not inside jit).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Lambert W (principal and -1 branches) via Halley iteration
+# ---------------------------------------------------------------------------
+
+def lambertw(x: np.ndarray, branch: int = 0, iters: int = 64) -> np.ndarray:
+    """Lambert W: solves w·e^w = x. Supports branch 0 (x ≥ −1/e) and −1
+    (−1/e ≤ x < 0). Vectorised, float64."""
+    x = np.asarray(x, dtype=np.float64)
+    if branch == 0:
+        # start: series for small |x|, log asymptote for large x
+        w = np.where(x >= 1.0,
+                     np.log(np.maximum(x, 1e-300)),
+                     x / (1.0 + np.maximum(x, -0.99)))
+    elif branch == -1:
+        # valid for x in [-1/e, 0)
+        lx = np.log(np.maximum(-x, 1e-300))
+        w = lx - np.log(np.maximum(-lx, 1e-12))
+        w = np.where(x > -0.1, lx - np.log(-lx), w)
+        w = np.minimum(w, -1.0)
+    else:
+        raise ValueError("branch must be 0 or -1")
+    for _ in range(iters):
+        ew = np.exp(np.clip(w, -700, 700))
+        f = w * ew - x
+        wp1 = w + 1.0
+        denom = ew * wp1 - (w + 2.0) * f / (2.0 * wp1 + 1e-300)
+        step = f / np.where(np.abs(denom) < 1e-300, 1e-300, denom)
+        w = w - step
+        if branch == -1:
+            w = np.minimum(w, -1.0 + 1e-12)
+    return w
+
+
+# ---------------------------------------------------------------------------
+# Rate model (Eq. 9-10)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class UEChannel:
+    """Per-UE channel snapshot in a round."""
+    p: float           # transmit power [W]
+    h: float           # small-scale fading coefficient (Rayleigh sample)
+    dist: float        # distance to BS [m]
+    kappa: float       # path loss exponent
+    n0: float          # noise PSD [W/Hz]
+
+    @property
+    def q(self) -> float:
+        """q ≡ p·h·d^{−κ} / N₀ — SNR numerator per Hz (units of Hz·SNR)."""
+        return self.p * self.h * self.dist ** (-self.kappa) / self.n0
+
+
+def uplink_rate(b: np.ndarray, ch: UEChannel) -> np.ndarray:
+    """r = b · ln(1 + q / b) [nats/s]  (Eq. 9)."""
+    b = np.asarray(b, dtype=np.float64)
+    return b * np.log1p(ch.q / np.maximum(b, 1e-12))
+
+
+def bandwidth_for_rate(rate: float, ch: UEChannel) -> float:
+    """Invert Eq. 9: the bandwidth b with r(b) = rate (Theorem 4 closed form).
+
+    With c ≡ rate/q:  b = −q·c / (W₋₁(−c·e^{−c}) + c).  Requires c < 1
+    (rate below the b→∞ limit r→q); returns +inf if unattainable.
+    """
+    q = ch.q
+    c = rate / q
+    if c >= 1.0:
+        return float("inf")
+    if c <= 0.0:
+        return 0.0
+    w = float(lambertw(np.asarray(-c * np.exp(-c)), branch=-1))
+    u = -w / c - 1.0          # u = q/b > 0
+    if u <= 0:
+        return float("inf")
+    return q / u
+
+
+def bandwidth_for_time(z_bits: float, t: float, tcmp: float, ch: UEChannel,
+                       bits_per_nat: float = 1.0 / np.log(2.0)) -> float:
+    """Bandwidth so UE finishes compute+upload of Z bits in exactly t seconds
+    (Γ of Theorem 4 = Z·N₀/((t−Tcmp)·p·h·d^{−κ}) = required_rate / q)."""
+    t_com = t - tcmp
+    if t_com <= 0:
+        return float("inf")
+    rate_nats = z_bits / bits_per_nat / t_com      # required nats/s
+    return bandwidth_for_rate(rate_nats, ch)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2: equal-finish-time allocation within a round
+# ---------------------------------------------------------------------------
+
+def equal_finish_allocation(z_bits: Sequence[float], tcmp: Sequence[float],
+                            channels: Sequence[UEChannel], total_bw: float,
+                            *, tol: float = 1e-9, max_iter: int = 200
+                            ) -> Tuple[np.ndarray, float]:
+    """Split ``total_bw`` among the scheduled UEs so all finish at the same
+    time T* (Theorem 2).  Returns (b[i], T*).
+
+    T ↦ Σ_i b_i(T) is strictly decreasing, so bisect on T.
+    """
+    z = np.asarray(z_bits, dtype=np.float64)
+    tc = np.asarray(tcmp, dtype=np.float64)
+    n = len(channels)
+    assert len(z) == len(tc) == n
+
+    def need(t: float) -> float:
+        return sum(bandwidth_for_time(z[i], t, tc[i], channels[i])
+                   for i in range(n))
+
+    lo = float(tc.max()) * (1.0 + 1e-9) + 1e-12
+    hi = max(lo * 2.0, 1e-6)
+    while need(hi) > total_bw and hi < 1e12:
+        hi *= 2.0
+    for _ in range(max_iter):
+        mid = 0.5 * (lo + hi)
+        if need(mid) > total_bw:
+            lo = mid
+        else:
+            hi = mid
+        if hi - lo < tol * max(hi, 1.0):
+            break
+    t_star = hi
+    b = np.array([bandwidth_for_time(z[i], t_star, tc[i], channels[i])
+                  for i in range(n)])
+    # numerical guard: scale onto the simplex Σb = B
+    s = b.sum()
+    if np.isfinite(s) and s > 0:
+        b = b * (total_bw / s)
+    return b, t_star
+
+
+def theorem4_lower_bound(z_bits: float, t_star: float, tcmp: float,
+                         ch: UEChannel, eta_i: float, n_ues: int,
+                         total_bw: float) -> float:
+    """The Γ-form lower bound of Eq. (33) for b_k^i (paper's closed form)."""
+    t_com = t_star - tcmp
+    if t_com <= 0:
+        return float("inf")
+    gamma = z_bits * ch.n0 / (t_com * ch.p * ch.h * ch.dist ** (-ch.kappa))
+    w = float(lambertw(np.asarray(-gamma * np.exp(-gamma)), branch=-1))
+    denom = w + gamma
+    if denom >= 0:
+        return float("inf")
+    return total_bw * n_ues * eta_i * z_bits / (t_com * (-denom)) \
+        / (total_bw * n_ues)  # normalised: dominant Γ-scaling term
+
+
+def weighted_equal_rate_allocation(eta: Sequence[float],
+                                   channels: Sequence[UEChannel],
+                                   total_bw: float, *, iters: int = 100
+                                   ) -> np.ndarray:
+    """The other extreme of Theorem 4: all n UEs share B with rates
+    r_i/η_i equalised (fixed-point on the common rate scale)."""
+    eta = np.asarray(eta, dtype=np.float64)
+    n = len(channels)
+    b = np.full(n, total_bw / n)
+    for _ in range(iters):
+        # current per-unit-eta rate implied by each b_i
+        r = np.array([uplink_rate(b[i], channels[i]) for i in range(n)])
+        scale = r / eta
+        target = np.exp(np.mean(np.log(np.maximum(scale, 1e-30))))
+        b_new = np.array([bandwidth_for_rate(target * eta[i], channels[i])
+                          for i in range(n)])
+        if not np.all(np.isfinite(b_new)):
+            b_new = np.where(np.isfinite(b_new), b_new, b)
+        b_new = b_new * (total_bw / b_new.sum())
+        if np.max(np.abs(b_new - b)) < 1e-9 * total_bw:
+            b = b_new
+            break
+        b = 0.5 * b + 0.5 * b_new
+    return b
+
+
+def optimal_bandwidth(z_bits: Sequence[float], tcmp: Sequence[float],
+                      channels: Sequence[UEChannel], total_bw: float,
+                      ) -> Tuple[np.ndarray, float]:
+    """Public entry: Theorem-2 equal-finish allocation for one round's
+    scheduled set; returns (b, round_time)."""
+    return equal_finish_allocation(z_bits, tcmp, channels, total_bw)
+
+
+# ---------------------------------------------------------------------------
+# Footnote-1 extension: transmit power as a decision variable
+# ---------------------------------------------------------------------------
+
+def power_for_time(z_bits: float, t: float, tcmp: float, bandwidth_hz: float,
+                   ch: UEChannel, p_max: float = float("inf")) -> float:
+    """Minimum transmit power so the UE finishes Z bits in exactly t seconds
+    at fixed bandwidth b (the paper's footnote-1 generalisation: "other
+    decision variables such like transmit power can also be included").
+
+    Invert Eq. 9 in p:  r = b·ln(1 + p·g/(b·N₀))  ⇒
+        p = (e^{r/b} − 1)·b·N₀ / g,   g ≡ h·d^{−κ}.
+    Returns +inf (infeasible) if p > p_max or t ≤ tcmp.
+    """
+    t_com = t - tcmp
+    if t_com <= 0 or bandwidth_hz <= 0:
+        return float("inf")
+    rate_nats = z_bits * np.log(2.0) / t_com
+    g = ch.h * ch.dist ** (-ch.kappa)
+    p = (np.exp(rate_nats / bandwidth_hz) - 1.0) * bandwidth_hz * ch.n0 / g
+    return float(p) if p <= p_max else float("inf")
+
+
+def min_power_equal_finish(z_bits: Sequence[float], tcmp: Sequence[float],
+                           bandwidths: Sequence[float],
+                           channels: Sequence[UEChannel], t_star: float
+                           ) -> np.ndarray:
+    """Per-UE minimum powers hitting a common finish time t* at the given
+    bandwidth split — the energy-efficient counterpart of Theorem 2."""
+    return np.array([
+        power_for_time(z_bits[i], t_star, tcmp[i], bandwidths[i], channels[i])
+        for i in range(len(channels))])

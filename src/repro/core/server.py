@@ -1,0 +1,114 @@
+"""Algorithm 1 — the PerFedS² parameter-server round logic (simulation path).
+
+This is the *protocol* object: it owns the global model, collects arriving
+client payloads, advances the round once ``A`` of them are in (semi-sync),
+and decides who receives the new model (the round's participants plus any
+client whose staleness exceeded ``S``).  ``mode`` generalises it:
+
+  sync  → A = n   (classic synchronous round)
+  semi  → A = A   (the paper)
+  async → A = 1   (update on every arrival)
+
+Wall-clock time, channels and scheduling live in ``fl/simulation.py``; model
+math (what a "payload" is) lives in ``fl/client.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import tree_add, tree_axpy, tree_scale, tree_zeros_like
+
+
+@dataclass
+class ServerConfig:
+    n_ues: int
+    participants_per_round: int      # A
+    staleness_bound: int             # S
+    beta: float                      # global step size
+    mode: str = "semi"               # sync | semi | async
+    staleness_discount: float = 1.0  # SAFA/FedSA-style λ^τ payload weighting
+                                     # (refs [20][21]); 1.0 = paper's Eq. (8)
+
+
+class SemiSyncServer:
+    """Collects payloads; applies Eq. (8); tracks staleness and distribution."""
+
+    def __init__(self, params: Any, cfg: ServerConfig):
+        self.cfg = cfg
+        self.params = params
+        self.round = 0
+        self.a = {"sync": cfg.n_ues, "semi": cfg.participants_per_round,
+                  "async": 1}[cfg.mode]
+        # version of the global model each UE last received
+        self.ue_version = np.zeros(cfg.n_ues, dtype=np.int64)
+        self._pending: List[Tuple[int, Any]] = []
+        # bookkeeping for analysis / tests
+        self.history_pi: List[np.ndarray] = []       # realised Π rows
+        self.history_staleness: List[np.ndarray] = []
+
+    # ------------------------------------------------------------------
+    def staleness(self, ue: int) -> int:
+        """τ_k^i — rounds since UE i last received the global model."""
+        return self.round - int(self.ue_version[ue])
+
+    def on_arrival(self, ue: int, payload: Any) -> Optional[Dict[str, Any]]:
+        """Register one client upload.  Returns None while the round is open;
+        once the A-th payload arrives, applies the global update and returns
+        {"round", "distribute": [ue...], "params"}.
+        """
+        self._pending.append((ue, payload, self.staleness(ue)))
+        if len(self._pending) < self.a:
+            return None
+
+        arrived = self._pending
+        self._pending = []
+        # --- Eq. (8): w_{k+1} = w_k − β/A Σ_{i∈A_k} ∇̃F_i(w_{k−τ_k^i}),
+        # optionally λ^τ staleness-discounted (normalised weighted mean) ----
+        lam = self.cfg.staleness_discount
+        if lam < 1.0:
+            wts = [lam ** tau for _, _, tau in arrived]
+            wsum = max(sum(wts), 1e-12)
+            agg = None
+            for (_, g, _), wt in zip(arrived, wts):
+                scaled = tree_scale(g, wt * self.a / wsum)
+                agg = scaled if agg is None else tree_add(agg, scaled)
+        else:
+            agg = None
+            for _, g, _ in arrived:
+                agg = g if agg is None else tree_add(agg, g)
+        self.params = tree_axpy(-self.cfg.beta / self.a, agg, self.params)
+
+        pi_row = np.zeros(self.cfg.n_ues, dtype=np.int64)
+        stale_row = np.array([self.staleness(i) for i in range(self.cfg.n_ues)])
+        for i, _, _tau in arrived:
+            pi_row[i] = 1
+        self.history_pi.append(pi_row)
+        self.history_staleness.append(stale_row)
+
+        self.round += 1
+        # --- distribution rule (Alg. 1 line 13-15) -------------------------
+        distribute = sorted({i for i, _, _tau in arrived}
+                            | {i for i in range(self.cfg.n_ues)
+                               if self.staleness(i) > self.cfg.staleness_bound})
+        for i in distribute:
+            self.ue_version[i] = self.round
+        return {"round": self.round, "distribute": distribute,
+                "params": self.params}
+
+    # ------------------------------------------------------------------
+    def pi_matrix(self) -> np.ndarray:
+        """Realised scheduling matrix Π (rows = completed rounds)."""
+        if not self.history_pi:
+            return np.zeros((0, self.cfg.n_ues), dtype=np.int64)
+        return np.stack(self.history_pi)
+
+    def realised_eta(self) -> np.ndarray:
+        """Empirical relative participation frequencies (Eq. 15)."""
+        pi = self.pi_matrix()
+        tot = pi.sum()
+        return pi.sum(0) / max(tot, 1)

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (
+    synthetic_mnist, synthetic_cifar, synthetic_shakespeare, synthetic_lm_corpus,
+)
+from repro.data.partition import partition_noniid, ClientDataset

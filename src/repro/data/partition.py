@@ -1,0 +1,123 @@
+"""Non-i.i.d. federated partitioning — Sec. VI-A-3 of the paper.
+
+Each UE is allocated a different local data size and holds exactly ``l`` of
+the label classes (``l`` = the non-iid level; smaller l = more heterogeneous).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class ClientDataset:
+    """One UE's local dataset + batch sampler (train/test split)."""
+    data: Dict[str, np.ndarray]
+    test: Dict[str, np.ndarray]
+    labels_held: np.ndarray
+    rng: np.random.Generator
+
+    def __len__(self) -> int:
+        return len(next(iter(self.data.values())))
+
+    def sample(self, batch_size: int) -> Dict[str, np.ndarray]:
+        n = len(self)
+        idx = self.rng.integers(0, n, size=min(batch_size, n))
+        return {k: v[idx] for k, v in self.data.items()}
+
+    def sample_triplet(self, b_in: int, b_o: int, b_h: int) -> Dict[str, Dict]:
+        """Three *independent* batches (D_in, D_o, D_h of Eq. 7)."""
+        return {"inner": self.sample(b_in), "outer": self.sample(b_o),
+                "hessian": self.sample(b_h)}
+
+
+def partition_noniid(data: Dict[str, np.ndarray], n_clients: int, l: int,
+                     *, n_classes: Optional[int] = None, seed: int = 0,
+                     label_key: str = "y", test_frac: float = 0.2,
+                     size_spread: float = 3.0) -> List[ClientDataset]:
+    """Partition ``data`` so each client holds exactly ``l`` classes.
+
+    Shards per class are split round-robin among the clients holding that
+    class; client sizes vary by up to ``size_spread``× (paper: "each UE is
+    allocated a different local data size").
+    """
+    rng = np.random.default_rng(seed)
+    y = data[label_key]
+    classes = np.unique(y) if n_classes is None else np.arange(n_classes)
+    n_cls = len(classes)
+    l = max(1, min(l, n_cls))
+
+    # assign exactly l distinct classes per client; spread coverage by
+    # preferring the least-held classes (classes no client holds stay unused
+    # — with n·l < n_classes full coverage is impossible anyway)
+    held_count = {int(c): 0 for c in classes}
+    client_classes = []
+    for _ in range(n_clients):
+        order = sorted(classes, key=lambda c: (held_count[int(c)],
+                                               rng.random()))
+        mine = np.array(sorted(order[:l]))
+        for c in mine:
+            held_count[int(c)] += 1
+        client_classes.append(mine)
+
+    # holders per class
+    holders: Dict[int, List[int]] = {int(c): [] for c in classes}
+    for ci, cls in enumerate(client_classes):
+        for c in cls:
+            holders[int(c)].append(ci)
+
+    # heterogeneous size weights
+    weights = np.exp(rng.uniform(0, np.log(size_spread), size=n_clients))
+
+    client_idx: List[List[int]] = [[] for _ in range(n_clients)]
+    for c in classes:
+        idx_c = np.where(y == c)[0]
+        rng.shuffle(idx_c)
+        hs = holders[int(c)]
+        if not hs:
+            continue
+        w = weights[hs] / weights[hs].sum()
+        cuts = np.floor(np.cumsum(w) * len(idx_c)).astype(int)
+        prev = 0
+        for hi, cut in zip(hs, cuts):
+            client_idx[hi].extend(idx_c[prev:cut].tolist())
+            prev = cut
+
+    out: List[ClientDataset] = []
+    for ci in range(n_clients):
+        idx = np.array(sorted(client_idx[ci]), dtype=np.int64)
+        if len(idx) < 4:                   # guarantee a usable shard — pad
+            pool = np.where(np.isin(y, client_classes[ci]))[0]
+            extra = rng.choice(pool, size=8)    # ...from the SAME l classes
+            idx = np.concatenate([idx, extra])
+        rng.shuffle(idx)
+        n_test = max(1, int(len(idx) * test_frac))
+        test_idx, train_idx = idx[:n_test], idx[n_test:]
+        out.append(ClientDataset(
+            data={k: v[train_idx] for k, v in data.items()},
+            test={k: v[test_idx] for k, v in data.items()},
+            labels_held=np.unique(y[train_idx]),
+            rng=np.random.default_rng(seed * 1000 + ci + 1),
+        ))
+    return out
+
+
+def sequence_clients(role_data: Dict[int, Dict[str, np.ndarray]],
+                     n_clients: int, seed: int = 0,
+                     test_frac: float = 0.2) -> List[ClientDataset]:
+    """Shakespeare-style: each client = one role's sequences."""
+    roles = sorted(role_data)[:n_clients]
+    out = []
+    for ci, role in enumerate(roles):
+        d = role_data[role]
+        n = len(d["tokens"])
+        n_test = max(1, int(n * test_frac))
+        out.append(ClientDataset(
+            data={k: v[n_test:] for k, v in d.items()},
+            test={k: v[:n_test] for k, v in d.items()},
+            labels_held=np.array([role]),
+            rng=np.random.default_rng(seed * 1000 + ci + 1),
+        ))
+    return out

@@ -1,0 +1,3 @@
+from repro.fl.client import make_payload_fn, personalized_eval, global_eval
+from repro.fl.algorithms import ALGORITHMS, algorithm_name
+from repro.fl.simulation import run_simulation, SimResult

@@ -1,0 +1,116 @@
+"""Client-side local computation for the three algorithm families.
+
+A client receives the global model ``w`` and produces a *payload* — a
+pytree with the same structure as the params — which the server plugs into
+Eq. (8):  w ← w − β/A · Σ payloads.
+
+* ``perfed``  — the paper's Eq. (7) meta-gradient (3 independent batches,
+  exact HVP term, optional first-order variant).
+* ``fedavg``  — E local epochs of SGD; payload = (w − w_local)/λ (pseudo-
+  gradient form so sync/semi/async share the same server rule).
+* ``fedprox`` — like fedavg but local objective + (μ/2)‖w − w_global‖².
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import FLConfig
+from repro.core import perfed
+from repro.utils import tree_axpy, tree_sub, tree_scale
+
+PayloadFn = Callable[..., Any]    # (params, batches, rng) -> payload pytree
+
+
+def _scalar_loss(model, params, batch, rng):
+    out = model.loss(params, batch, rng)
+    return out[0] if isinstance(out, tuple) else out
+
+
+def _local_sgd(model, params, batches, lr: float, steps: int, rng,
+               prox_mu: float = 0.0):
+    """``steps`` SGD steps over the provided batch list (cycled)."""
+    anchor = params
+
+    def one_step(p, inp):
+        batch, r = inp
+        def obj(q):
+            loss = _scalar_loss(model, q, batch, r)
+            if prox_mu > 0.0:
+                sq = jax.tree.map(lambda a, b: jnp.sum(
+                    jnp.square((a - b).astype(jnp.float32))), q, anchor)
+                loss = loss + 0.5 * prox_mu * jax.tree.reduce(
+                    jnp.add, sq, jnp.asarray(0.0))
+            return loss
+        g = jax.grad(obj)(p)
+        return jax.tree.map(lambda a, b: (a - lr * b).astype(a.dtype), p, g), 0
+
+    rngs = jax.random.split(rng, steps)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *batches) \
+        if len(batches) > 1 else jax.tree.map(lambda x: x[None], batches[0])
+    n_b = jax.tree.leaves(stacked)[0].shape[0]
+    idx = jnp.arange(steps) % n_b
+    seq = jax.tree.map(lambda x: x[idx], stacked)
+    p_final, _ = jax.lax.scan(one_step, params, (seq, rngs))
+    return p_final
+
+
+def make_payload_fn(model, fl: FLConfig, algorithm: str) -> PayloadFn:
+    """Jittable payload computation for one client.
+
+    ``alpha`` is a traced argument so heterogeneous per-UE learning rates
+    α_i (the paper's §II-B generalisation) share one compiled function.
+    """
+
+    if algorithm == "perfed":
+        def payload(params, batches, rng, alpha):
+            return perfed.perfed_grad(model.loss, params, batches, alpha,
+                                      first_order=fl.first_order, rng=rng)
+    elif algorithm in ("fedavg", "fedprox"):
+        mu = fl.prox_mu if algorithm == "fedprox" else 0.0
+        steps = max(1, fl.local_epochs)
+
+        def payload(params, batches, rng, alpha):
+            blist = [batches["inner"], batches["outer"], batches["hessian"]]
+            w_local = _local_sgd(model, params, blist, alpha, steps, rng,
+                                 prox_mu=mu)
+            # pseudo-gradient: Δ/α̂ so the server's β-scaled rule matches SGD
+            return tree_scale(tree_sub(params, w_local),
+                              1.0 / (alpha * steps))
+    elif algorithm == "pfedme":
+        # pFedMe [Dinh et al., ref 11]: personalized model θ̂ solves
+        # min_θ f_i(θ) + λ/2‖θ − w‖²; the Moreau-envelope gradient
+        # ∇F_i(w) = λ(w − θ̂(w)) is the upload
+        lam = fl.pfedme_lambda
+        steps = max(1, fl.pfedme_steps)
+
+        def payload(params, batches, rng, alpha):
+            blist = [batches["inner"], batches["outer"], batches["hessian"]]
+            theta = _local_sgd(model, params, blist, alpha, steps, rng,
+                               prox_mu=lam)
+            return tree_scale(tree_sub(params, theta), lam)
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+
+    return jax.jit(payload)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+def personalized_eval(model, fl: FLConfig, params, client_batches, rng=None):
+    """PFL metric: adapt on the client's support batch, evaluate on its
+    held-out query batch.  Returns (loss, maybe-accuracy)."""
+    adapted = perfed.adapt(model.loss, params, client_batches["inner"],
+                           fl.alpha, rng)
+    out = model.loss(adapted, client_batches["outer"], rng)
+    return out if isinstance(out, tuple) else (out, {})
+
+
+def global_eval(model, params, batch, rng=None):
+    out = model.loss(params, batch, rng)
+    return out if isinstance(out, tuple) else (out, {})

@@ -1,0 +1,195 @@
+"""Event-driven simulator of PerFedS² over a mobile edge network.
+
+Combines all the pieces:
+
+  wireless.EdgeNetwork   — geometry, Rayleigh fading, heterogeneous CPUs
+  core.bandwidth         — Theorem-2/4 allocations (or equal-split baseline)
+  core.scheduler         — η targets (equal / distance-derived)
+  core.server            — Algorithm 1 round protocol (sync / semi / async)
+  fl.client              — payload math (fedavg / fedprox / perfed)
+
+The event loop is a priority queue over UE upload-finish times.  Each UE
+holds the last model version it received; payloads are computed against that
+version (⇒ real gradient staleness, exactly as in the paper).  Wall-clock
+time uses Eq. (10)–(12) with fading resampled per local iteration.
+"""
+from __future__ import annotations
+
+import heapq
+import time as pytime
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ExperimentConfig
+from repro.core.bandwidth import weighted_equal_rate_allocation, uplink_rate
+from repro.core.scheduler import relative_frequencies
+from repro.core.server import SemiSyncServer, ServerConfig
+from repro.data.partition import ClientDataset
+from repro.fl.client import make_payload_fn, personalized_eval
+from repro.wireless.channel import EdgeNetwork
+from repro.wireless.timing import compute_time, upload_time, model_bits
+
+
+@dataclass
+class SimResult:
+    name: str
+    times: np.ndarray            # wall-clock at each eval point [s]
+    losses: np.ndarray           # personalized (PFL) eval loss
+    global_losses: np.ndarray    # loss of the raw global model
+    accs: np.ndarray             # accuracy if the task defines one (else nan)
+    rounds: np.ndarray           # round index at each eval point
+    total_time: float
+    pi: np.ndarray               # realised schedule matrix
+    eta_target: np.ndarray
+    eta_realised: np.ndarray
+    wait_fraction: float         # mean fraction of time UEs spent idle
+
+
+def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
+                   *, algorithm: str = "perfed", mode: str = "semi",
+                   bandwidth_policy: str = "optimal",
+                   max_rounds: Optional[int] = None,
+                   eval_every: int = 5, eval_clients: int = 8,
+                   seed: int = 0, name: Optional[str] = None,
+                   verbose: bool = False) -> SimResult:
+    fl = cfg.fl
+    n = len(clients)
+    max_rounds = max_rounds or fl.rounds
+    rng = np.random.default_rng(seed)
+    jrng = jax.random.PRNGKey(seed)
+
+    # --- network + η + static bandwidth allocation -------------------------
+    net = EdgeNetwork.drop(cfg.wireless, n, seed=seed,
+                           uniform_distance=(fl.eta_mode == "equal"))
+    if fl.eta_mode == "equal":
+        eta = relative_frequencies(n, "equal")
+    else:
+        eta = relative_frequencies(n, "rates", rates=net.mean_rates())
+
+    h_mean = cfg.wireless.rayleigh_scale * float(np.sqrt(np.pi / 2))
+    mean_chans = [net.channel(i, h_mean) for i in range(n)]
+    if bandwidth_policy == "optimal":
+        bw = weighted_equal_rate_allocation(eta, mean_chans,
+                                            cfg.wireless.total_bandwidth_hz)
+    elif bandwidth_policy == "equal":
+        bw = np.full(n, cfg.wireless.total_bandwidth_hz / n)
+    else:
+        raise ValueError(f"unknown bandwidth policy {bandwidth_policy!r}")
+
+    # --- model / payloads ---------------------------------------------------
+    params0 = model.init(jrng)
+    z_bits = cfg.wireless.grad_bits or model_bits(params0)
+    payload_fn = make_payload_fn(model, fl, algorithm)
+    # per-UE inner learning rates α_i (paper §II-B: "easily extended to the
+    # general case when UEs have diverse learning rate α_i")
+    if fl.alpha_spread > 0:
+        s = 1.0 + fl.alpha_spread
+        alphas = fl.alpha * np.exp(rng.uniform(-np.log(s), np.log(s), size=n))
+    else:
+        alphas = np.full(n, fl.alpha)
+
+    server = SemiSyncServer(params0, ServerConfig(
+        n_ues=n, participants_per_round=fl.participants_per_round,
+        staleness_bound=fl.staleness_bound, beta=fl.beta, mode=mode,
+        staleness_discount=fl.staleness_discount))
+
+    # --- per-UE state -------------------------------------------------------
+    held_params: List[Any] = [params0 for _ in range(n)]
+    d_i = np.array([min(fl.inner_batch + fl.outer_batch + fl.hessian_batch,
+                        len(c)) for c in clients])
+    busy_time = np.zeros(n)
+
+    def cycle_duration(i: int) -> float:
+        h = float(net.sample_fading()[i])
+        tcmp = compute_time(cfg.wireless.cpu_cycles_per_sample, int(d_i[i]),
+                            float(net.cpu_freq[i]))
+        tcom = upload_time(z_bits, float(bw[i]), net.channel(i, h))
+        return tcmp + tcom
+
+    # --- eval ----------------------------------------------------------------
+    eval_idx = rng.choice(n, size=min(eval_clients, n), replace=False)
+
+    @jax.jit
+    def _eval_one(params, batches, r):
+        ploss, paux = personalized_eval(model, fl, params, batches, r)
+        gout = model.loss(params, batches["outer"], r)
+        gloss, gaux = gout if isinstance(gout, tuple) else (gout, {})
+        acc = paux.get("acc", jnp.nan) if isinstance(paux, dict) else jnp.nan
+        return ploss, gloss, acc
+
+    def evaluate(params, r) -> Tuple[float, float, float]:
+        pl, gl, ac = [], [], []
+        for ci in eval_idx:
+            c = clients[ci]
+            batches = {"inner": c.sample(fl.inner_batch),
+                       "outer": {k: v for k, v in c.test.items()}}
+            p, g, a = _eval_one(params, batches, r)
+            pl.append(float(p)); gl.append(float(g)); ac.append(float(a))
+        acc = (float(np.nanmean(ac))
+               if np.any(np.isfinite(ac)) else float("nan"))
+        return float(np.mean(pl)), float(np.mean(gl)), acc
+
+    # --- event loop ----------------------------------------------------------
+    # epoch-based lazy cancellation: when the server re-distributes to a UE
+    # whose upload is still in flight (τ > S forced refresh, Alg. 1 line 13),
+    # the UE ABANDONS the stale computation and restarts — the old event is
+    # dropped at pop time if its epoch is outdated.
+    heap: List[Tuple[float, int, int, int, float, int]] = []
+    epoch = np.zeros(n, dtype=np.int64)
+    seq = 0
+    for i in range(n):
+        dur = cycle_duration(i)
+        heapq.heappush(heap, (dur, seq, i, 0, dur, 0))
+        seq += 1
+
+    times, plosses, glosses, accs, rounds_at = [], [], [], [], []
+    t_now = 0.0
+    jr = jrng
+
+    p0, g0, a0 = evaluate(params0, jr)
+    times.append(0.0); plosses.append(p0); glosses.append(g0); accs.append(a0)
+    rounds_at.append(0)
+
+    while server.round < max_rounds and heap:
+        t_now, _, ue, version, dur, ev_epoch = heapq.heappop(heap)
+        if ev_epoch != epoch[ue]:
+            continue                    # abandoned (stale-refresh) computation
+        busy_time[ue] += dur            # only completed cycles count as busy
+        jr, sub = jax.random.split(jr)
+        batches = clients[ue].sample_triplet(fl.inner_batch, fl.outer_batch,
+                                             fl.hessian_batch)
+        payload = payload_fn(held_params[ue], batches, sub,
+                             float(alphas[ue]))
+        result = server.on_arrival(ue, payload)
+        if result is None:
+            continue
+        for i in result["distribute"]:
+            held_params[i] = result["params"]
+            epoch[i] += 1               # cancels any in-flight computation
+            dur_i = cycle_duration(i)
+            heapq.heappush(heap, (t_now + dur_i, seq, i, result["round"],
+                                  dur_i, int(epoch[i])))
+            seq += 1
+        k = result["round"]
+        if k % eval_every == 0 or k == max_rounds:
+            p, g, a = evaluate(result["params"], jr)
+            times.append(t_now); plosses.append(p); glosses.append(g)
+            accs.append(a); rounds_at.append(k)
+            if verbose:
+                print(f"[{name or algorithm}-{mode}] round {k:4d} "
+                      f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
+
+    wait_frac = float(1.0 - busy_time.sum() / max(n * t_now, 1e-9))
+    return SimResult(
+        name=name or f"{algorithm}-{mode}",
+        times=np.array(times), losses=np.array(plosses),
+        global_losses=np.array(glosses), accs=np.array(accs),
+        rounds=np.array(rounds_at), total_time=t_now,
+        pi=server.pi_matrix(), eta_target=eta,
+        eta_realised=server.realised_eta(),
+        wait_fraction=max(wait_frac, 0.0),
+    )

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot spots of the model zoo + the
+PerFedS² aggregation inner loop.
+
+  flash_attention   blockwise online-softmax attention (causal/SWA/GQA)
+  decode_attention  single-token query vs (ring) KV cache — serving hot spot
+  ssd_scan          Mamba-2 SSD chunk-local terms
+  fused_adam        fused optimizer update (p, m, v in one pass)
+  stale_aggregate   Eq. (8) masked stale-gradient aggregation
+
+``ops.py`` exposes jit'd wrappers; ``ref.py`` holds the pure-jnp oracles
+every kernel is tested against (interpret=True on this CPU container;
+set ``ops.INTERPRET = False`` on real TPUs).
+"""

@@ -1,0 +1,104 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Materialised attention. q [B,Hq,L,D], k/v [B,Hkv,L,D] → [B,Hq,L,D]."""
+    b, hq, l, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(l)[:, None]
+    k_pos = jnp.arange(l)[None, :]
+    mask = jnp.ones((l, l), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos: jax.Array, q_pos: jax.Array, *,
+                         window: int = 0,
+                         scale: Optional[float] = None) -> jax.Array:
+    """One-token decode attention against a (ring) cache.
+
+    q [B,Hq,D]; k/v [B,Hkv,S,D]; pos [B,S] (−1 = empty); q_pos [B]."""
+    b, hq, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = (pos >= 0) & (pos <= q_pos[:, None])
+    if window > 0:
+        mask &= (q_pos[:, None] - pos) < window
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_chunk_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                  c: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-chunk SSD reference (naive recurrence).
+
+    x [B,Q,H,P], dt [B,Q,H], a [H], b/c [B,Q,N] →
+      (y_intra [B,Q,H,P]  — zero initial state,
+       state   [B,H,P,N]  — end-of-chunk state,
+       decay   [B,H]      — total chunk decay)
+    """
+    bs, qlen, h, p = x.shape
+    n = b.shape[-1]
+    da = dt * a[None, None, :]                      # [B,Q,H]
+
+    def step(carry, t):
+        s = carry
+        dai = da[:, t]                              # [B,H]
+        upd = jnp.einsum("bhp,bn->bhpn", x[:, t] * dt[:, t][..., None], b[:, t])
+        s = s * jnp.exp(dai)[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, c[:, t])
+        return s, y
+
+    s0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    s_fin, ys = jax.lax.scan(step, s0, jnp.arange(qlen))
+    y = jnp.moveaxis(ys, 0, 1)                      # [B,Q,H,P]
+    decay = jnp.exp(da.sum(axis=1))                 # [B,H]
+    return y, s_fin, decay
+
+
+def adam_ref(p, m, v, g, *, lr: float, b1: float, b2: float, eps: float,
+             t: int):
+    """Single-tensor Adam reference."""
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    mh = m2 / (1 - b1 ** t)
+    vh = v2 / (1 - b2 ** t)
+    return p - lr * mh / (jnp.sqrt(vh) + eps), m2, v2
+
+
+def stale_aggregate_ref(params, buffers, mask, *, beta: float):
+    """Eq. (8): w − (β/A)·Σ_c mask_c · buf_c for one tensor.
+
+    params [D...], buffers [C, D...], mask [C]."""
+    a = jnp.maximum(mask.sum(), 1.0)
+    agg = jnp.einsum("c...,c->...", buffers.astype(jnp.float32), mask)
+    return (params.astype(jnp.float32) - (beta / a) * agg).astype(params.dtype)

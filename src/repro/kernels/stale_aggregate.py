@@ -1,0 +1,59 @@
+"""Masked stale-gradient aggregation kernel — Eq. (8) fused (Pallas TPU
+target, validated interpret=True).
+
+    w ← w − (β/A) Σ_c π_c · buf_c
+
+Fusing the masked reduction over the cohort axis with the parameter update
+reads each buffer slot exactly once and writes w once — the unfused graph
+materialises the Σ intermediate in HBM.  Cohort count is small and static,
+so the reduction is an unrolled VMEM loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 4096
+
+
+def _agg_kernel(scal_ref, mask_ref, p_ref, buf_ref, out_ref, *, n_cohorts: int):
+    beta_over_a = scal_ref[0]
+    acc = jnp.zeros(p_ref.shape, jnp.float32)
+    for c in range(n_cohorts):                     # static unroll (C is small)
+        acc = acc + mask_ref[c] * buf_ref[c].astype(jnp.float32)
+    out_ref[...] = (p_ref[...].astype(jnp.float32)
+                    - beta_over_a * acc).astype(out_ref.dtype)
+
+
+def stale_aggregate_flat(params: jax.Array, buffers: jax.Array,
+                         mask: jax.Array, *, beta: float,
+                         block: int = BLOCK, interpret: bool = True
+                         ) -> jax.Array:
+    """params [N], buffers [C, N], mask [C] → updated params [N]."""
+    n = params.shape[0]
+    c = buffers.shape[0]
+    n_pad = -(-n // block) * block
+    if n_pad != n:
+        params = jnp.pad(params, (0, n_pad - n))
+        buffers = jnp.pad(buffers, ((0, 0), (0, n_pad - n)))
+    a = jnp.maximum(mask.sum(), 1.0)
+    scal = jnp.stack([jnp.asarray(beta, jnp.float32) / a])
+    kernel = functools.partial(_agg_kernel, n_cohorts=c)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pad // block,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # β/A
+            pl.BlockSpec(memory_space=pltpu.SMEM),           # mask [C]
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((c, block), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), params.dtype),
+        interpret=interpret,
+    )(scal, mask.astype(jnp.float32), params, buffers)
+    return out[:n]

@@ -1,0 +1,185 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) case.
+
+MUST set XLA_FLAGS before any jax import (device count locks at first init):
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import sys             # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax             # noqa: E402
+
+from repro import sharding           # noqa: E402
+from repro.configs import ALIASES, ARCH_IDS, SHAPES, get_config, get_shape  # noqa: E402
+from repro.launch.mesh import make_production_mesh                          # noqa: E402
+from repro.launch.specs import arch_rules, build_case                       # noqa: E402
+from repro.launch.hlo_analysis import analyze_hlo                           # noqa: E402
+from repro.launch.roofline import collective_bytes, roofline_report         # noqa: E402
+
+DEFAULT_OUT = "artifacts/dryrun"
+
+ASSIGNED = [a for a in ARCH_IDS if a not in ("mnist_dnn", "lenet5",
+                                             "char_lstm")]
+
+
+OPT_LEVERS = ("attn_bf16", "moe_ep", "first_order", "no_remat", "cache_rep",
+              "tp_only", "dp_only", "donate")
+
+# every param logical axis — blanked out by the dp_only lever
+_PARAM_AXES = ("embed", "heads", "kv_heads", "ffn", "experts", "vocab",
+               "ssm_inner", "lru", "mla_rank")
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool,
+             moe_impl: str = "gather", perfed_step: bool = True,
+             collect_hlo_stats: bool = True,
+             rule_overrides: Optional[Dict[str, Any]] = None,
+             opts: tuple = ()) -> Dict[str, Any]:
+    import dataclasses
+
+    from repro.config import FLConfig
+
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    fl = FLConfig()
+    if "attn_bf16" in opts:
+        cfg = dataclasses.replace(cfg, attn_cast_f32=False)
+    if "no_remat" in opts:
+        cfg = dataclasses.replace(cfg, remat=False)
+    if "moe_ep" in opts:
+        moe_impl = "ep"
+    if "first_order" in opts:
+        fl = dataclasses.replace(fl, first_order=True)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = arch_rules(cfg, mesh)
+    if "tp_only" in opts:
+        # pure tensor parallelism: params replicated over data (no ZeRO-3)
+        # — kills the per-step weight all-gathers in decode
+        rules = rules.with_overrides(embed=())
+    if "dp_only" in opts:
+        # pure data parallelism: params fully replicated, batch over BOTH
+        # axes — for small models the only collective left is the gradient
+        # all-reduce (and per-device compute matches the 2-D layout)
+        rules = rules.with_overrides(
+            batch=("pod", "data", "model"),
+            **{a: () for a in _PARAM_AXES})
+    if rule_overrides:
+        rules = rules.with_overrides(**rule_overrides)
+    cohorts = mesh.shape.get("pod", 0) if (multi_pod and shape.kind == "train") \
+        else None
+
+    t0 = time.time()
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi_pod" if multi_pod else "single_pod",
+                           "status": "ok"}
+    try:
+        with sharding.use_mesh(mesh, rules):
+            case = build_case(cfg, shape, mesh, moe_impl=moe_impl, fl=fl,
+                              semi_sync_cohorts=cohorts,
+                              perfed_step=perfed_step, rules=rules,
+                              cache_policy=("replicate" if "cache_rep" in opts
+                                            else "auto"))
+            donate = ()
+            if "donate" in opts:
+                # decode: donate the cache (arg 1); train: donate the state
+                donate = (1,) if shape.kind == "decode" else (0,)
+            jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                             out_shardings=case.out_shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*case.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec.update({
+            "name": case.name,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "flops": float(cost.get("flops", 0.0)) if cost else 0.0,
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", 0),
+            },
+        })
+        if collect_hlo_stats:
+            hlo_text = compiled.as_text()
+            rec["collectives"] = collective_bytes(hlo_text)
+            # trip-count-aware analysis (XLA cost_analysis counts each scan
+            # body once — see EXPERIMENTS.md §Methodology)
+            rec["hlo_tc"] = analyze_hlo(hlo_text)
+        n_devices = 1
+        for v in mesh.shape.values():
+            n_devices *= v
+        rec["n_devices"] = n_devices
+        rec["roofline"] = roofline_report(rec)
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec["status"] = "fail"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (assigned 10)")
+    ap.add_argument("--shape", default="all",
+                    help="shape name or 'all' (4 assigned shapes)")
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod", "both"])
+    ap.add_argument("--moe-impl", default="gather", choices=["gather", "ep"])
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--opt", action="append", default=[],
+                    choices=list(OPT_LEVERS),
+                    help="§Perf levers (repeatable): attn_bf16 moe_ep "
+                         "first_order no_remat")
+    args = ap.parse_args(argv)
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single_pod": [False], "multi_pod": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_case(arch, shape_name, multi_pod=mp,
+                               moe_impl=args.moe_impl,
+                               opts=tuple(args.opt))
+                rec["tag"] = args.tag
+                results.append(rec)
+                status = rec["status"]
+                extra = (f"flops={rec.get('flops', 0):.3e} "
+                         f"peak={rec.get('memory', {}).get('peak_bytes', 0)/2**30:.2f}GiB"
+                         if status == "ok" else rec.get("error", ""))
+                print(f"[{status:4s}] {arch:22s} {shape_name:12s} "
+                      f"{'multi' if mp else 'single':6s} "
+                      f"({rec['total_s']:6.1f}s) {extra}", flush=True)
+                fname = os.path.join(
+                    args.out,
+                    f"{args.tag}_{arch}_{shape_name}_"
+                    f"{'multi' if mp else 'single'}.json")
+                with open(fname, "w") as f:
+                    json.dump(rec, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    print(f"\n{n_ok}/{len(results)} cases lowered+compiled OK")
+    return 0 if n_ok == len(results) else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × mesh), TPU v5e constants:
+
+  compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s bf16)
+  memory     = HLO_bytes   / (chips × 819e9  B/s HBM)
+  collective = coll_bytes  / (chips × 50e9   B/s per ICI link)
+
+``cost_analysis`` reports the per-device SPMD module, so terms below divide
+by chips only when the numbers are whole-program (we detect via a flag).
+Collective bytes are not in cost_analysis — we parse the compiled HLO and sum
+operand bytes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}<>/ ]+?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)"
+                       r"\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Any]:
+    """Sum output-shape bytes per collective kind from HLO text.
+
+    Uses the *result* shape of each collective op (the data volume the
+    collective moves per device, up to the algorithm factor)."""
+    out: Dict[str, float] = {}
+    count: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(
+            r"^[%\w.\-]+\s*=\s*(.+?)\s+"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0.0) + b
+        count[kind] = count.get(kind, 0) + 1
+    return {"bytes_by_kind": out, "count_by_kind": count,
+            "total_bytes": sum(out.values())}
+
+
+def roofline_report(rec: Dict[str, Any], *, per_device: bool = True
+                    ) -> Dict[str, Any]:
+    """Compute the three roofline terms for one dry-run record.
+
+    All HLO numbers are from the per-device SPMD module.  When the
+    trip-count-aware analysis (``hlo_tc``) is present it is preferred: XLA's
+    ``cost_analysis`` counts each while/scan body ONCE, so for
+    scan-over-layers models the raw numbers understate true per-step work by
+    ~num_layers× (see EXPERIMENTS.md §Methodology).
+    """
+    chips = rec.get("n_devices", 1)
+    tc = rec.get("hlo_tc") or {}
+    flops = tc.get("dot_flops_tc") or rec.get("flops", 0.0)
+    # HBM traffic: XLA's post-fusion "bytes accessed" is the best per-body
+    # estimate but counts scan bodies once; scale it by the trip-count flop
+    # ratio (scan bodies dominate both flops and bytes in layer stacks).
+    # ``bytes_estimate_tc`` (pre-fusion Σ result bytes) is only an upper
+    # bound and NOT used for the term.
+    raw_bytes = rec.get("bytes_accessed", 0.0)
+    raw_flops = rec.get("flops", 0.0)
+    if tc.get("dot_flops_tc") and raw_flops > 0:
+        scale = max(1.0, tc["dot_flops_tc"] / raw_flops)
+        bytes_acc = raw_bytes * scale
+    else:
+        bytes_acc = raw_bytes
+    coll = (tc.get("collective_total_tc")
+            if tc.get("collective_total_tc") is not None
+            else rec.get("collectives", {}).get("total_bytes", 0.0))
+    div = 1.0 if per_device else float(chips)
+    t_compute = flops / div / PEAK_FLOPS
+    t_memory = bytes_acc / div / HBM_BW
+    t_coll = coll / div / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    return {**terms, "dominant": dominant,
+            "bound_fraction": terms[dominant] / max(sum(terms.values()), 1e-30)}
+
+
+def model_flops(arch_params: float, tokens: float, *, moe_active: float = 0.0
+                ) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE)."""
+    n = moe_active if moe_active > 0 else arch_params
+    return 6.0 * n * tokens

@@ -1,0 +1,96 @@
+"""MusicGen-style audio decoder over EnCodec tokens. [arXiv:2306.05284]
+
+The EnCodec neural codec itself is a STUB per the assignment — the model
+consumes/produces discrete codec tokens directly.  MusicGen's delay-pattern
+multi-codebook stream is modelled with K parallel codebooks: input embedding
+is the sum of per-codebook embeddings; output is K parallel LM heads.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models.transformer import TransformerLM
+
+Params = Dict[str, Any]
+
+
+class AudioLM(TransformerLM):
+    """tokens have shape [B, L, K] (K = num_audio_codebooks)."""
+
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "gather"):
+        assert cfg.num_audio_codebooks > 0
+        super().__init__(cfg, moe_impl)
+        self.k_cb = cfg.num_audio_codebooks
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        params = super().init(rng)
+        k1, k2 = jax.random.split(jax.random.fold_in(rng, 7))
+        dt = L._dt(cfg)
+        # per-codebook embeddings + heads replace the single-stream ones
+        params["embedding"] = {
+            "tok_embed": (jax.random.normal(
+                k1, (self.k_cb, cfg.vocab_size, cfg.d_model), jnp.float32)
+                * 0.02).astype(dt),
+            "lm_head": (jax.random.normal(
+                k2, (self.k_cb, cfg.d_model, cfg.vocab_size), jnp.float32)
+                / math.sqrt(cfg.d_model)).astype(dt),
+        }
+        return params
+
+    def _embed(self, params: Params, tokens: jax.Array) -> jax.Array:
+        # tokens [B, L, K] → sum_k embed_k(tokens[..., k])
+        emb = params["embedding"]["tok_embed"]                        # [K, V, d]
+        onehot_free = jnp.take_along_axis  # noqa — we use fancy indexing below
+        parts = [emb[i][tokens[..., i]] for i in range(self.k_cb)]
+        return sum(parts)
+
+    def _unembed(self, params: Params, x: jax.Array) -> jax.Array:
+        # [B, L, d] → [B, L, K, V]
+        return jnp.einsum("bld,kdv->blkv", x, params["embedding"]["lm_head"])
+
+    def forward(self, params: Params, tokens: jax.Array, *, positions=None,
+                cache=None, image_embeds=None, window=None):
+        cfg = self.cfg
+        b, lq = tokens.shape[0], tokens.shape[1]
+        if positions is None:
+            positions = jnp.arange(lq, dtype=jnp.int32)
+        win = cfg.sliding_window if window is None else window
+        x = self._embed(params, tokens)
+        x = sharding.constrain(x, "batch", None, None)
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def body(carry, xs):
+            xc, aux = carry
+            if cache is not None:
+                lp, lc = xs
+            else:
+                lp, lc = xs, None
+            xc, new_lc, a = self._layer_apply(lp, xc, positions, lc, win)
+            return (xc, aux + a), (new_lc if new_lc is not None else 0)
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+        xs = (params["layers"], cache) if cache is not None else params["layers"]
+        (x, aux), new_cache = jax.lax.scan(body_fn, (x, aux0), xs)
+        x = L.make_norm(cfg)[1](params["final_norm"], x)
+        logits = self._unembed(params, x)
+        return logits, (new_cache if cache is not None else None), aux
+
+    def loss(self, params, batch, rng=None):
+        logits, _, aux = self.forward(params, batch["tokens"])       # [B,L,K,V]
+        targets = batch["targets"]                                   # [B,L,K]
+        mask = batch.get("mask")
+        if mask is not None:
+            mask = mask[..., None] * jnp.ones_like(targets, jnp.float32)
+        ce = L.cross_entropy(logits, targets, mask)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def predict(self, params, batch):
+        return self.forward(params, batch["tokens"])[0]

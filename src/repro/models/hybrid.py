@@ -1,0 +1,306 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local attention,
+interleaved 2:1 (two recurrent blocks, then one local-MQA block). [arXiv:2402.19427]
+
+The linear recurrence h_t = a_t h_{t-1} + b_t is evaluated with
+``jax.lax.associative_scan`` at train/prefill time and as an O(1) step at
+decode time — natively sub-quadratic for ``long_500k``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+_C_RGLRU = 8.0   # Griffin's fixed exponent scale
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.hybrid.lru_width or cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU core
+# ---------------------------------------------------------------------------
+
+def rglru_scan(u: jax.Array, log_a: jax.Array, gate_i: jax.Array,
+               h0: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Gated linear recurrence over time.
+
+    u       [B, L, W]  inputs (post input-gate)
+    log_a   [B, L, W]  per-step log decay (≤ 0)
+    gate_i  [B, L, W]  input gate in [0, 1]
+    Returns (h [B, L, W], h_last [B, W]).
+    """
+    a = jnp.exp(log_a)
+    # multiplier sqrt(1 - a^2), computed stably from log a
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult * (gate_i * u)
+    if h0 is not None:
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def rglru_step(h: jax.Array, u: jax.Array, log_a: jax.Array, gate_i: jax.Array
+               ) -> jax.Array:
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a * h + mult * (gate_i * u)
+
+
+class RecurrentGemmaLM:
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "gather"):
+        self.cfg = cfg
+        pat = cfg.hybrid.pattern
+        assert pat.count("attn") == 1 and len(pat) == 3, "expect 2 rglru : 1 attn"
+        self.group = len(pat)
+        self.n_groups = cfg.num_layers // self.group
+        self.n_tail = cfg.num_layers - self.n_groups * self.group   # extra rglru
+
+    # ------------------------------------------------------------- init ---
+    def _rec_layer_init(self, key) -> Params:
+        cfg = self.cfg
+        w = _lru_width(cfg)
+        dt = L._dt(cfg)
+        ks = jax.random.split(key, 6)
+        return {
+            "norm_attn": L.rmsnorm_init(cfg.d_model, dt),
+            "lru_in": L.dense_init(ks[0], cfg.d_model, w, dt),
+            "lru_in_gate": L.dense_init(ks[1], cfg.d_model, w, dt),
+            "conv_w": (jax.random.normal(ks[2], (4, w), jnp.float32) / 2.0).astype(dt),
+            "conv_b": jnp.zeros((w,), dt),
+            "lru_gate_a": L.dense_init(ks[3], w, w, dt),
+            "lru_gate_i": L.dense_init(ks[4], w, w, dt),
+            # Λ init so a^c ∈ (0.9, 0.999)-ish
+            "lru_a": jnp.log(jnp.expm1(
+                -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C_RGLRU)).astype(jnp.float32),
+            "lru_out": L.dense_init(ks[5], w, cfg.d_model, dt,
+                                    scale=1.0 / math.sqrt(w * cfg.num_layers)),
+            "norm_ffn": L.rmsnorm_init(cfg.d_model, dt),
+            **L.mlp_init(key, cfg),
+        }
+
+    def _attn_layer_init(self, key) -> Params:
+        cfg = self.cfg
+        dt = L._dt(cfg)
+        return {
+            "norm_attn": L.rmsnorm_init(cfg.d_model, dt),
+            "attn": L.attention_init(key, cfg),
+            "norm_ffn": L.rmsnorm_init(cfg.d_model, dt),
+            **L.mlp_init(key, cfg),
+        }
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        k_e, k_r, k_a, k_t = jax.random.split(rng, 4)
+        k_rs = jax.random.split(k_r, self.n_groups * 2)
+        k_rs = k_rs.reshape((self.n_groups, 2) + k_rs.shape[1:])
+        p: Params = {
+            "embedding": L.embedding_init(k_e, cfg),
+            "final_norm": L.rmsnorm_init(cfg.d_model, L._dt(cfg)),
+            # stacked [n_groups, 2, ...] recurrent layers and [n_groups] attn
+            "rec_layers": jax.vmap(jax.vmap(self._rec_layer_init))(k_rs),
+            "attn_layers": jax.vmap(self._attn_layer_init)(
+                jax.random.split(k_a, self.n_groups)),
+        }
+        if self.n_tail:
+            p["tail_layers"] = jax.vmap(self._rec_layer_init)(
+                jax.random.split(k_t, self.n_tail))
+        return p
+
+    # ---------------------------------------------------------- blocks ----
+    def _rec_apply(self, pl: Params, x: jax.Array, *,
+                   conv_state: Optional[jax.Array] = None,
+                   h_state: Optional[jax.Array] = None, decode: bool = False
+                   ) -> Tuple[jax.Array, Optional[jax.Array], Optional[jax.Array]]:
+        cfg = self.cfg
+        resid = x
+        xn = L.rmsnorm(pl["norm_attn"], x)
+        u = xn @ pl["lru_in"]                                        # [B,L,W]
+        gate_branch = jax.nn.gelu(xn @ pl["lru_in_gate"])
+        bsz, lq, w = u.shape
+        cw = pl["conv_w"].shape[0]
+        if decode:
+            hist = jnp.concatenate([conv_state, u], axis=1)          # [B,cw,W]
+            u_c = jnp.einsum("bwc,wc->bc", hist, pl["conv_w"]) + pl["conv_b"]
+            u_c = u_c[:, None, :]
+            new_conv = hist[:, 1:, :]
+        else:
+            pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+            u_c = sum(pad[:, i:i + lq, :] * pl["conv_w"][i][None, None, :]
+                      for i in range(cw)) + pl["conv_b"]
+            new_conv = pad[:, -(cw - 1):, :]
+        r = jax.nn.sigmoid(u_c @ pl["lru_gate_a"]).astype(jnp.float32)
+        gi = jax.nn.sigmoid(u_c @ pl["lru_gate_i"]).astype(jnp.float32)
+        log_a = -_C_RGLRU * jax.nn.softplus(pl["lru_a"])[None, None, :] * r
+        uf = u_c.astype(jnp.float32)
+        if decode:
+            h = rglru_step(h_state.astype(jnp.float32), uf[:, 0, :],
+                           log_a[:, 0, :], gi[:, 0, :])
+            hseq = h[:, None, :]
+            h_last = h
+        else:
+            hseq, h_last = rglru_scan(uf, log_a, gi,
+                                      h0=None if h_state is None
+                                      else h_state.astype(jnp.float32))
+        y = (hseq.astype(x.dtype) * gate_branch) @ pl["lru_out"]
+        x = resid + y
+        h2 = L.rmsnorm(pl["norm_ffn"], x)
+        x = x + L.mlp_apply(pl, h2, cfg)
+        return x, new_conv.astype(x.dtype), h_last.astype(x.dtype)
+
+    def _attn_apply(self, pl: Params, x: jax.Array, positions, cache, window
+                    ) -> Tuple[jax.Array, Optional[Params]]:
+        cfg = self.cfg
+        h = L.rmsnorm(pl["norm_attn"], x)
+        out, new_cache = L.attention_apply(pl["attn"], h, cfg=cfg,
+                                           positions=positions, cache=cache,
+                                           causal=True, window=window)
+        x = x + out
+        h = L.rmsnorm(pl["norm_ffn"], x)
+        x = x + L.mlp_apply(pl, h, cfg)
+        return x, new_cache
+
+    # --------------------------------------------------------- forward ----
+    def forward(self, params: Params, tokens: jax.Array, *,
+                positions: Optional[jax.Array] = None, cache=None, **_kw):
+        cfg = self.cfg
+        lq = tokens.shape[1]
+        if positions is None:
+            positions = jnp.arange(lq, dtype=jnp.int32)
+        window = cfg.hybrid.attention_window
+        x = L.embed(params["embedding"], tokens)
+        x = sharding.constrain(x, "batch", None, None)
+
+        def rec_one(rp, xi):
+            out, _, _ = self._rec_apply(rp, xi)
+            return out
+
+        def attn_one(ap, xi):
+            out, _ = self._attn_apply(ap, xi, positions, None, window)
+            return out
+
+        if cfg.remat:
+            rec_one = jax.checkpoint(rec_one)
+            attn_one = jax.checkpoint(attn_one)
+
+        def group_body(xc, gp):
+            rec_p, attn_p = gp
+            xc, _ = jax.lax.scan(lambda xi, rp: (rec_one(rp, xi), 0), xc, rec_p)
+            return attn_one(attn_p, xc), 0
+
+        x, _ = jax.lax.scan(group_body, x,
+                            (params["rec_layers"], params["attn_layers"]))
+        if self.n_tail:
+            def tail_body(xc, rp):
+                out, _, _ = self._rec_apply(rp, xc)
+                return out, 0
+            x, _ = jax.lax.scan(tail_body, x, params["tail_layers"])
+        x = L.rmsnorm(params["final_norm"], x)
+        logits = L.unembed(params["embedding"], x)
+        return logits, None, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, rng=None):
+        logits, _, _ = self.forward(params, batch["tokens"])
+        ce = L.cross_entropy(logits, batch["targets"], batch.get("mask"))
+        return ce, {"ce": ce}
+
+    def predict(self, params, batch):
+        return self.forward(params, batch["tokens"])[0]
+
+    # ------------------------------------------------------- serving ------
+    def init_cache(self, batch: int, cache_len: int) -> Params:
+        cfg = self.cfg
+        w = _lru_width(cfg)
+        dt = L._dt(cfg)
+        window = min(cache_len, cfg.hybrid.attention_window)
+        hd = cfg.resolved_head_dim
+        n_rec_total = self.n_groups * 2 + self.n_tail
+        return {
+            "conv": jnp.zeros((n_rec_total, batch, 3, w), dt),
+            "h": jnp.zeros((n_rec_total, batch, w), dt),
+            "attn": L.init_kv_cache(cfg, batch, window,
+                                    num_layers=self.n_groups),
+        }
+
+    def _run_with_cache(self, params: Params, tokens: jax.Array,
+                        cache: Params, positions, decode: bool
+                        ) -> Tuple[jax.Array, Params]:
+        cfg = self.cfg
+        window = cfg.hybrid.attention_window
+        x = L.embed(params["embedding"], tokens)
+        n_rec = self.n_groups * 2
+
+        rec_caches = {k: cache[k][:n_rec].reshape(
+            (self.n_groups, 2) + cache[k].shape[1:]) for k in ("conv", "h")}
+
+        def group_body(xc, xs):
+            rec_p, attn_p, rc, ac = xs
+
+            def rec_body(xi, inner):
+                rp, rcc = inner
+                out, new_conv, new_h = self._rec_apply(
+                    rp, xi, conv_state=rcc["conv"],
+                    h_state=rcc["h"] if decode else None, decode=decode)
+                return out, {"conv": new_conv, "h": new_h}
+
+            xc, new_rc = jax.lax.scan(rec_body, xc, (rec_p, rc))
+            xc, new_ac = self._attn_apply(attn_p, xc, positions, ac, window)
+            return xc, (new_rc, new_ac)
+
+        x, (new_rec, new_attn) = jax.lax.scan(
+            group_body, x,
+            (params["rec_layers"], params["attn_layers"],
+             {"conv": rec_caches["conv"], "h": rec_caches["h"]}, cache["attn"]))
+
+        new_cache = {
+            "conv": new_rec["conv"].reshape((n_rec,) + new_rec["conv"].shape[2:]),
+            "h": new_rec["h"].reshape((n_rec,) + new_rec["h"].shape[2:]),
+            "attn": new_attn,
+        }
+        if self.n_tail:
+            def tail_body(xc, xs):
+                rp, cv, hh = xs
+                out, ncv, nh = self._rec_apply(rp, xc, conv_state=cv,
+                                               h_state=hh if decode else None,
+                                               decode=decode)
+                return out, (ncv, nh)
+            x, (tcv, th) = jax.lax.scan(
+                tail_body, x, (params["tail_layers"],
+                               cache["conv"][n_rec:], cache["h"][n_rec:]))
+            new_cache["conv"] = jnp.concatenate([new_cache["conv"], tcv], 0)
+            new_cache["h"] = jnp.concatenate([new_cache["h"], th], 0)
+        x = L.rmsnorm(params["final_norm"], x)
+        return x, new_cache
+
+    def prefill(self, params: Params, tokens: jax.Array, cache_len: int,
+                **_kw) -> Tuple[jax.Array, Params]:
+        b, lq = tokens.shape
+        cache = self.init_cache(b, cache_len)
+        positions = jnp.arange(lq, dtype=jnp.int32)
+        x, cache = self._run_with_cache(params, tokens, cache, positions,
+                                        decode=False)
+        logits = L.unembed(params["embedding"], x[:, -1:])
+        return logits, cache
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    pos: jax.Array, **_kw) -> Tuple[jax.Array, Params]:
+        positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+        x, cache = self._run_with_cache(params, tokens, cache, positions,
+                                        decode=True)
+        logits = L.unembed(params["embedding"], x)
+        return logits, cache

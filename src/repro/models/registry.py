@@ -1,0 +1,63 @@
+"""Model family registry: ``ModelConfig.family`` → builder."""
+from __future__ import annotations
+
+from repro.config import ModelConfig
+
+
+def _dense(cfg, moe_impl="gather"):
+    from repro.models.transformer import TransformerLM
+    return TransformerLM(cfg, moe_impl)
+
+
+def _moe(cfg, moe_impl="gather"):
+    from repro.models.transformer import TransformerLM
+    return TransformerLM(cfg, moe_impl)
+
+
+def _ssm(cfg, moe_impl="gather"):
+    from repro.models.ssm import Mamba2LM
+    return Mamba2LM(cfg, moe_impl)
+
+
+def _hybrid(cfg, moe_impl="gather"):
+    from repro.models.hybrid import RecurrentGemmaLM
+    return RecurrentGemmaLM(cfg, moe_impl)
+
+
+def _vlm(cfg, moe_impl="gather"):
+    from repro.models.vlm import VisionLM
+    return VisionLM(cfg, moe_impl)
+
+
+def _audio(cfg, moe_impl="gather"):
+    from repro.models.audio import AudioLM
+    return AudioLM(cfg, moe_impl)
+
+
+def _small(cfg, moe_impl="gather"):
+    from repro.models import small
+    builders = {"mnist_dnn": small.MnistDNN, "lenet5": small.LeNet5,
+                "char_lstm": small.CharLSTM}
+    key = cfg.name.split("-")[0]
+    for k, b in builders.items():
+        if cfg.name.startswith(k):
+            return b(cfg)
+    raise ValueError(f"unknown small model {cfg.name!r}")
+
+
+MODEL_FAMILIES = {
+    "dense": _dense,
+    "moe": _moe,
+    "ssm": _ssm,
+    "hybrid": _hybrid,
+    "vlm": _vlm,
+    "audio": _audio,
+    "small": _small,
+}
+
+
+def build_model(cfg: ModelConfig, moe_impl: str = "gather"):
+    if cfg.family not in MODEL_FAMILIES:
+        raise ValueError(f"unknown model family {cfg.family!r} "
+                         f"(have {sorted(MODEL_FAMILIES)})")
+    return MODEL_FAMILIES[cfg.family](cfg, moe_impl)

@@ -1,0 +1,166 @@
+"""The paper's own experiment models (Section VI-A):
+
+* ``mnist_dnn``  — 2-layer DNN, hidden 100 (MNIST)
+* ``lenet5``     — 2 conv + 3 FC (CIFAR-100)
+* ``char_lstm``  — LSTM next-character classifier (Shakespeare)
+
+These are the models actually trained by the FL simulator on CPU; they share
+the same (init/loss/predict) protocol as the large LM families.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _dense(key, n_in, n_out):
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (n_in, n_out)) * math.sqrt(2.0 / n_in)
+    return {"dense_w": w, "dense_b": jnp.zeros((n_out,))}
+
+
+def _apply_dense(p, x):
+    return x @ p["dense_w"] + p["dense_b"]
+
+
+def _xent(logits, y):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+class MnistDNN:
+    """784 → 100 → num_classes (paper: hidden layer of size 100)."""
+
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "gather"):
+        self.cfg = cfg
+        self.n_in = 784
+        self.hidden = cfg.d_model or 100
+        self.n_cls = cfg.vocab_size or 10
+
+    def init(self, rng) -> Params:
+        k1, k2 = jax.random.split(rng)
+        return {"fc1": _dense(k1, self.n_in, self.hidden),
+                "fc2": _dense(k2, self.hidden, self.n_cls)}
+
+    def predict(self, params, batch):
+        x = batch["x"].reshape(batch["x"].shape[0], -1)
+        h = jax.nn.relu(_apply_dense(params["fc1"], x))
+        return _apply_dense(params["fc2"], h)
+
+    def loss(self, params, batch, rng=None):
+        logits = self.predict(params, batch)
+        ce = _xent(logits, batch["y"])
+        return ce, {"ce": ce,
+                    "acc": jnp.mean((jnp.argmax(logits, -1) == batch["y"]))}
+
+
+class LeNet5:
+    """LeNet-5: two conv layers + three FC layers (paper's CIFAR-100 model)."""
+
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "gather"):
+        self.cfg = cfg
+        self.n_cls = cfg.vocab_size or 100
+        self.in_ch = 3
+        self.in_hw = 32
+
+    def init(self, rng) -> Params:
+        ks = jax.random.split(rng, 5)
+        def conv(k, h, w, cin, cout):
+            return {"conv_w": jax.random.normal(k, (h, w, cin, cout))
+                    * math.sqrt(2.0 / (h * w * cin)),
+                    "conv_b": jnp.zeros((cout,))}
+        flat = 5 * 5 * 16
+        return {
+            "c1": conv(ks[0], 5, 5, self.in_ch, 6),
+            "c2": conv(ks[1], 5, 5, 6, 16),
+            "f1": _dense(ks[2], flat, 120),
+            "f2": _dense(ks[3], 120, 84),
+            "f3": _dense(ks[4], 84, self.n_cls),
+        }
+
+    @staticmethod
+    def _conv(p, x):
+        y = jax.lax.conv_general_dilated(
+            x, p["conv_w"], window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return y + p["conv_b"]
+
+    @staticmethod
+    def _pool(x):
+        return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                     (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+    def predict(self, params, batch):
+        x = batch["x"]
+        if x.ndim == 3:
+            x = x[..., None]
+        h = self._pool(jax.nn.relu(self._conv(params["c1"], x)))
+        h = self._pool(jax.nn.relu(self._conv(params["c2"], h)))
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(_apply_dense(params["f1"], h))
+        h = jax.nn.relu(_apply_dense(params["f2"], h))
+        return _apply_dense(params["f3"], h)
+
+    def loss(self, params, batch, rng=None):
+        logits = self.predict(params, batch)
+        ce = _xent(logits, batch["y"])
+        return ce, {"ce": ce,
+                    "acc": jnp.mean((jnp.argmax(logits, -1) == batch["y"]))}
+
+
+class CharLSTM:
+    """LSTM next-character classifier (paper's Shakespeare model)."""
+
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "gather"):
+        self.cfg = cfg
+        self.vocab = cfg.vocab_size or 80
+        self.hidden = cfg.d_model or 256
+        self.embed_dim = 8
+
+    def init(self, rng) -> Params:
+        k1, k2, k3, k4 = jax.random.split(rng, 4)
+        h, e = self.hidden, self.embed_dim
+        return {
+            "embed": jax.random.normal(k1, (self.vocab, e)) * 0.1,
+            "lstm_wx": jax.random.normal(k2, (e, 4 * h)) / math.sqrt(e),
+            "lstm_wh": jax.random.normal(k3, (h, 4 * h)) / math.sqrt(h),
+            "lstm_b": jnp.zeros((4 * h,)),
+            "out": _dense(k4, h, self.vocab),
+        }
+
+    def _run(self, params, tokens):
+        b, l = tokens.shape
+        x = params["embed"][tokens]                                  # [B,L,E]
+        h0 = jnp.zeros((b, self.hidden))
+        c0 = jnp.zeros((b, self.hidden))
+
+        def step(carry, xt):
+            h, c = carry
+            z = xt @ params["lstm_wx"] + h @ params["lstm_wh"] + params["lstm_b"]
+            i, f, g, o = jnp.split(z, 4, axis=-1)
+            c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+            h = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (h, c), h
+
+        (_, _), hs = jax.lax.scan(step, (h0, c0), jnp.moveaxis(x, 1, 0))
+        return jnp.moveaxis(hs, 0, 1)                                # [B,L,H]
+
+    def predict(self, params, batch):
+        hs = self._run(params, batch["tokens"])
+        return _apply_dense(params["out"], hs[:, -1, :])             # next char
+
+    def loss(self, params, batch, rng=None):
+        """Next-character prediction over the whole sequence."""
+        hs = self._run(params, batch["tokens"])
+        logits = _apply_dense(params["out"], hs)                     # [B,L,V]
+        targets = batch["targets"]
+        ce = _xent(logits.reshape(-1, self.vocab), targets.reshape(-1))
+        return ce, {"ce": ce}

@@ -1,0 +1,231 @@
+"""Decoder-only transformer stack (dense / MoE / MLA / SWA / cross-attn).
+
+One scanned homogeneous layer stack (``lax.scan`` over stacked params) keeps
+the HLO compact so 40–95-layer configs lower/compile quickly on the 512-device
+dry-run mesh.  VLM-style cross-attention interleaves are handled by scanning
+over *groups* (N self layers + 1 cross layer).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.config import ModelConfig
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+
+class TransformerLM:
+    """Language model over integer tokens.
+
+    Public API (shared by all model families in this repo):
+      init(rng) -> params
+      loss(params, batch, rng) -> (scalar_loss, metrics)
+      forward(params, tokens, ...) -> logits
+      prefill(params, tokens, cache_len) -> (logits_last, cache)
+      decode_step(params, cache, tokens, pos) -> (logits, cache)
+    """
+
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "gather"):
+        self.cfg = cfg
+        self.moe_impl = moe_impl
+        self.is_moe = cfg.moe is not None
+        self.is_mla = cfg.attention == "mla"
+        self.n_cross = (cfg.num_layers // cfg.cross_attn_every
+                        if cfg.cross_attn_every else 0)
+
+    # ------------------------------------------------------------- init ---
+    def _layer_init(self, key) -> Params:
+        cfg = self.cfg
+        k_attn, k_ffn, k_n1, k_n2 = jax.random.split(key, 4)
+        norm_init, _ = L.make_norm(cfg)
+        p: Params = {
+            "norm_attn": norm_init(cfg.d_model, L._dt(cfg)),
+            "norm_ffn": norm_init(cfg.d_model, L._dt(cfg)),
+        }
+        if self.is_mla:
+            p["attn"] = L.mla_init(k_attn, cfg)
+        else:
+            p["attn"] = L.attention_init(k_attn, cfg)
+        if self.is_moe:
+            p["moe"] = L.moe_init(k_ffn, cfg)
+        else:
+            p.update(L.mlp_init(k_ffn, cfg))
+        return p
+
+    def _cross_layer_init(self, key) -> Params:
+        cfg = self.cfg
+        norm_init, _ = L.make_norm(cfg)
+        return {
+            "norm_cross": norm_init(cfg.d_model, L._dt(cfg)),
+            "attn": L.attention_init(key, cfg, cross=True),
+            "gate_cross": jnp.zeros((), L._dt(cfg)),   # zero-init gated residual
+        }
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        k_e, k_l, k_c, k_f = jax.random.split(rng, 4)
+        norm_init, _ = L.make_norm(cfg)
+        n_scan = cfg.num_layers
+        params: Params = {
+            "embedding": L.embedding_init(k_e, cfg),
+            "final_norm": norm_init(cfg.d_model, L._dt(cfg)),
+            "layers": jax.vmap(self._layer_init)(jax.random.split(k_l, n_scan)),
+        }
+        if self.n_cross:
+            params["cross_layers"] = jax.vmap(self._cross_layer_init)(
+                jax.random.split(k_c, self.n_cross))
+        return params
+
+    # ---------------------------------------------------------- layers ----
+    def _layer_apply(self, p: Params, x: jax.Array, positions: jax.Array,
+                     cache: Optional[Params], window: int
+                     ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+        cfg = self.cfg
+        _, norm = L.make_norm(cfg)
+        h = norm(p["norm_attn"], x)
+        if self.is_mla:
+            attn_out, new_cache = L.mla_apply(
+                p["attn"], h, cfg=cfg, positions=positions, cache=cache,
+                window=window)
+        else:
+            attn_out, new_cache = L.attention_apply(
+                p["attn"], h, cfg=cfg, positions=positions, cache=cache,
+                causal=True, window=window)
+        x = x + attn_out
+        h = norm(p["norm_ffn"], x)
+        if self.is_moe:
+            ffn_out, aux = L.moe_apply(p["moe"], h, cfg, impl=self.moe_impl)
+        else:
+            ffn_out, aux = L.mlp_apply(p, h, cfg), jnp.zeros((), jnp.float32)
+        x = x + ffn_out
+        x = sharding.constrain(x, "batch", None, None)
+        return x, new_cache, aux
+
+    def _cross_apply(self, p: Params, x: jax.Array, kv: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        _, norm = L.make_norm(cfg)
+        h = norm(p["norm_cross"], x)
+        out, _ = L.attention_apply(p["attn"], h, cfg=cfg,
+                                   positions=jnp.zeros((1,), jnp.int32),
+                                   kv_input=kv, causal=False)
+        return x + jnp.tanh(p["gate_cross"]).astype(x.dtype) * out
+
+    # --------------------------------------------------------- forward ----
+    def forward(self, params: Params, tokens: jax.Array, *,
+                positions: Optional[jax.Array] = None,
+                cache: Optional[Params] = None,
+                image_embeds: Optional[jax.Array] = None,
+                window: Optional[int] = None,
+                ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+        """Returns (logits [B, L, V], new_cache, aux_loss)."""
+        cfg = self.cfg
+        b, lq = tokens.shape[0], tokens.shape[1]
+        if positions is None:
+            positions = jnp.arange(lq, dtype=jnp.int32)
+        win = cfg.sliding_window if window is None else window
+
+        tokens = sharding.constrain(tokens, "batch", None)
+        x = L.embed(params["embedding"], tokens)
+        x = sharding.constrain(x, "batch", None, None)
+
+        layer_params = params["layers"]
+        aux0 = jnp.zeros((), jnp.float32)
+
+        def body(carry, xs):
+            xc, aux = carry
+            if cache is not None:
+                lp, lc = xs
+            else:
+                lp, lc = xs, None
+            xc, new_lc, a = self._layer_apply(lp, xc, positions, lc, win)
+            new_lc = new_lc if new_lc is not None else 0
+            return (xc, aux + a), new_lc
+
+        body_fn = jax.checkpoint(body) if (cfg.remat and cache is None) else body
+
+        if self.n_cross:
+            # group = cross_attn_every self layers + 1 cross layer
+            g = cfg.cross_attn_every
+            ng = self.n_cross
+            grouped = jax.tree.map(
+                lambda a: a.reshape((ng, g) + a.shape[1:]), layer_params)
+            cross_params = params["cross_layers"]
+            kv = image_embeds
+            assert kv is not None, "vlm forward requires image_embeds"
+            grouped_cache = (jax.tree.map(
+                lambda a: a.reshape((ng, g) + a.shape[1:]), cache)
+                if cache is not None else None)
+
+            def group_body(carry, xs):
+                if cache is not None:
+                    gp, cp, gc = xs
+                    (xc, aux), new_gc = jax.lax.scan(body_fn, carry, (gp, gc))
+                else:
+                    gp, cp = xs
+                    (xc, aux), new_gc = jax.lax.scan(body_fn, carry, gp)
+                xc = self._cross_apply(cp, xc, kv)
+                return (xc, aux), new_gc
+
+            xs = ((grouped, cross_params, grouped_cache) if cache is not None
+                  else (grouped, cross_params))
+            (x, aux), new_cache = jax.lax.scan(group_body, (x, aux0), xs)
+            if cache is not None:
+                new_cache = jax.tree.map(
+                    lambda a: a.reshape((ng * g,) + a.shape[2:]), new_cache)
+        else:
+            xs = (layer_params, cache) if cache is not None else layer_params
+            (x, aux), new_cache = jax.lax.scan(body_fn, (x, aux0), xs)
+
+        x = L.make_norm(cfg)[1](params["final_norm"], x)
+        logits = L.unembed(params["embedding"], x)
+        logits = sharding.constrain(logits, "batch", None, "vocab")
+        return logits, (new_cache if cache is not None else None), aux
+
+    # ------------------------------------------------------------ loss ----
+    def loss(self, params: Params, batch: Dict[str, jax.Array], rng=None
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        tokens = batch["tokens"]
+        targets = batch["targets"]
+        mask = batch.get("mask")
+        logits, _, aux = self.forward(
+            params, tokens, image_embeds=batch.get("image_embeds"))
+        ce = L.cross_entropy(logits, targets, mask)
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def predict(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        logits, _, _ = self.forward(params, batch["tokens"],
+                                    image_embeds=batch.get("image_embeds"))
+        return logits
+
+    # ------------------------------------------------------- serving ------
+    def init_cache(self, batch: int, cache_len: int) -> Params:
+        cfg = self.cfg
+        if self.is_mla:
+            return L.init_mla_cache(cfg, batch, cache_len)
+        return L.init_kv_cache(cfg, batch, cache_len)
+
+    def prefill(self, params: Params, tokens: jax.Array, cache_len: int, *,
+                image_embeds: Optional[jax.Array] = None,
+                window: Optional[int] = None
+                ) -> Tuple[jax.Array, Params]:
+        b = tokens.shape[0]
+        cache = self.init_cache(b, cache_len)
+        logits, cache, _ = self.forward(params, tokens, cache=cache,
+                                        image_embeds=image_embeds, window=window)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params: Params, cache: Params, tokens: jax.Array,
+                    pos: jax.Array, *, image_embeds: Optional[jax.Array] = None,
+                    window: Optional[int] = None) -> Tuple[jax.Array, Params]:
+        """tokens [B, 1]; pos scalar int32 (absolute position of this token)."""
+        positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+        logits, cache, _ = self.forward(params, tokens, positions=positions,
+                                        cache=cache, image_embeds=image_embeds,
+                                        window=window)
+        return logits, cache

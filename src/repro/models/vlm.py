@@ -1,0 +1,66 @@
+"""Llama-3.2-Vision-style VLM text decoder. [hf:meta-llama/Llama-3.2-11B-Vision]
+
+The vision frontend (ViT encoder + projector) is a STUB per the assignment:
+``input_specs`` supplies precomputed patch embeddings [B, N_img, d_model];
+this module implements the language decoder with gated cross-attention layers
+inserted every ``cfg.cross_attn_every`` self-attention layers.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.transformer import TransformerLM
+
+Params = Dict[str, Any]
+
+
+class VisionLM(TransformerLM):
+    """TransformerLM + mandatory image embeddings through cross-attention."""
+
+    def __init__(self, cfg: ModelConfig, moe_impl: str = "gather"):
+        assert cfg.cross_attn_every > 0, "vlm requires cross_attn_every"
+        super().__init__(cfg, moe_impl)
+
+    def stub_image_embeds(self, batch: int, dtype=None) -> jax.Array:
+        """Deterministic stand-in for the ViT+projector output."""
+        cfg = self.cfg
+        n = cfg.num_image_tokens or 576
+        dt = dtype or jnp.dtype(cfg.dtype)
+        base = jnp.arange(n * cfg.d_model, dtype=jnp.float32)
+        emb = jnp.sin(base * 0.001).reshape(n, cfg.d_model) * 0.02
+        return jnp.broadcast_to(emb[None], (batch, n, cfg.d_model)).astype(dt)
+
+    def predict(self, params, batch):
+        image_embeds = batch.get("image_embeds")
+        if image_embeds is None:
+            image_embeds = self.stub_image_embeds(batch["tokens"].shape[0])
+        logits, _, _ = self.forward(params, batch["tokens"],
+                                    image_embeds=image_embeds)
+        return logits
+
+    def loss(self, params, batch, rng=None):
+        tokens = batch["tokens"]
+        image_embeds = batch.get("image_embeds")
+        if image_embeds is None:
+            image_embeds = self.stub_image_embeds(tokens.shape[0])
+        logits, _, aux = self.forward(params, tokens, image_embeds=image_embeds)
+        from repro.models import layers as L
+        ce = L.cross_entropy(logits, batch["targets"], batch.get("mask"))
+        return ce + aux, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, tokens, cache_len, *, image_embeds=None, window=None):
+        if image_embeds is None:
+            image_embeds = self.stub_image_embeds(tokens.shape[0])
+        return super().prefill(params, tokens, cache_len,
+                               image_embeds=image_embeds, window=window)
+
+    def decode_step(self, params, cache, tokens, pos, *, image_embeds=None,
+                    window=None):
+        if image_embeds is None:
+            image_embeds = self.stub_image_embeds(tokens.shape[0])
+        return super().decode_step(params, cache, tokens, pos,
+                                   image_embeds=image_embeds, window=window)

@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (
+    Optimizer, sgd, momentum, adam, make_optimizer, clip_by_global_norm,
+)
+from repro.optim.schedule import warmup_cosine, constant

@@ -1,0 +1,104 @@
+"""Minimal pure-pytree optimizers (no optax dependency).
+
+``Optimizer`` is an (init, update) pair operating on arbitrary pytrees.
+``update`` returns (new_params, new_state).  Learning rate is passed at call
+time so schedules stay outside the optimizer state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_axpy, tree_norm
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Tuple[Any, Any]]   # (grads, state, params, lr)
+    name: str = "opt"
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Global-norm gradient clipping; returns (clipped, pre_clip_norm)."""
+    g_norm = tree_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g_norm, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), g_norm
+
+
+def sgd() -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, lr):
+        new = jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype),
+                           params, grads)
+        return new, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(mu: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params)}
+
+    def update(grads, state, params, lr):
+        m = jax.tree.map(lambda mi, g: mu * mi + g.astype(jnp.float32),
+                         state["m"], grads)
+        if nesterov:
+            step = jax.tree.map(lambda mi, g: mu * mi + g.astype(jnp.float32),
+                                m, grads)
+        else:
+            step = m
+        new = jax.tree.map(lambda p, s: (p - lr * s).astype(p.dtype),
+                           params, step)
+        return new, {"m": m}
+
+    return Optimizer(init, update, "momentum")
+
+
+def adam(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+         weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, state_dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(lambda mi, g: b1 * mi + (1 - b1) * g.astype(state_dtype),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda vi, g: b2 * vi + (1 - b2) * jnp.square(g.astype(state_dtype)),
+            state["v"], grads)
+        bc1 = 1.0 - jnp.power(b1, tf)
+        bc2 = 1.0 - jnp.power(b2, tf)
+
+        def step(p, mi, vi):
+            mh = mi / bc1
+            vh = vi / bc2
+            upd = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(state_dtype)
+            return (p.astype(state_dtype) - lr * upd).astype(p.dtype)
+
+        new = jax.tree.map(step, params, m, v)
+        return new, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update, "adam")
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd()
+    if name == "momentum":
+        return momentum(**{k: v for k, v in kw.items() if k in ("mu", "nesterov")})
+    if name == "adam":
+        keys = ("b1", "b2", "eps", "weight_decay", "state_dtype")
+        return adam(**{k: v for k, v in kw.items() if k in keys})
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,22 @@
+"""Learning-rate schedules (plain callables step → lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def fn(step):
+        return jnp.asarray(lr, jnp.float32)
+    return fn
+
+
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+    return fn

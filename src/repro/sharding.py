@@ -1,0 +1,248 @@
+"""Logical-axis sharding rules → ``PartitionSpec``/``NamedSharding``.
+
+The model code never mentions physical mesh axes.  It tags tensors/params with
+*logical* axis names ("batch", "heads", "ffn", "experts", "vocab", "embed", ...)
+and this module maps them onto whatever physical mesh is active:
+
+  single-pod  : (data=16, model=16)
+  multi-pod   : (pod=2, data=16, model=16)
+
+The mapping table is itself a config-level object (``AxisRules``) so the perf
+pass can swap sharding strategies without touching model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclass(frozen=True)
+class AxisRules:
+    """Logical-name → tuple of candidate physical axes.
+
+    For each logical axis we keep an ordered tuple of physical axes; at spec
+    resolution time the first subset of axes present in the active mesh (and
+    not already consumed by another dimension of the same tensor) is used.
+    """
+    rules: dict = field(default_factory=lambda: dict(
+        # --- activations ---
+        batch=("pod", "data"),
+        seq=(),                      # sequence replicated by default
+        act_embed=(),                # activation d_model replicated
+        act_heads=("model",),        # attention activations split by head
+        act_ffn=("model",),
+        cache_batch=("data",),
+        cache_seq=(),                # decode cache sequence dim
+        cache_heads=("model",),
+        # --- parameters (2-D sharded: feature->model, embed->data ZeRO-style) ---
+        embed=("data",),             # d_model dim of weights
+        heads=("model",),            # q/o head dims
+        kv_heads=("model",),
+        ffn=("model",),              # FFN hidden
+        experts=("model",),          # MoE expert dim
+        vocab=("model",),
+        ssm_inner=("model",),        # mamba d_inner
+        lru=("model",),              # rg-lru width
+        mla_rank=(),                 # MLA latent kept replicated
+        layers=(),                   # stacked scan-layer dim
+        # --- FL / client axis ---
+        clients=("pod",),            # semi-sync cohort axis
+    ))
+
+    def with_overrides(self, **kw) -> "AxisRules":
+        d = dict(self.rules)
+        d.update(kw)
+        return replace(self, rules=d)
+
+
+class _ShardingCtx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: AxisRules = AxisRules()
+
+
+_CTX = _ShardingCtx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[AxisRules] = None):
+    """Activate a mesh + rule set for spec resolution (and as jit context)."""
+    old_mesh, old_rules = _CTX.mesh, _CTX.rules
+    _CTX.mesh = mesh
+    if rules is not None:
+        _CTX.rules = rules
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = old_mesh, old_rules
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def active_rules() -> AxisRules:
+    return _CTX.rules
+
+
+def logical_spec(names: Sequence[Optional[str]],
+                 mesh: Optional[Mesh] = None,
+                 rules: Optional[AxisRules] = None) -> P:
+    """Resolve a sequence of logical axis names to a PartitionSpec.
+
+    Physical axes already used by an earlier dimension of the same tensor are
+    skipped (a mesh axis may shard at most one dim).
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P(*([None] * len(names)))
+    avail = set(mesh.axis_names)
+    used: set = set()
+    out = []
+    for name in names:
+        if name is None:
+            out.append(None)
+            continue
+        cand = rules.rules.get(name, ())
+        picked = tuple(a for a in cand if a in avail and a not in used)
+        used.update(picked)
+        if len(picked) == 0:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(picked)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
+    """``with_sharding_constraint`` against logical axes; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = logical_spec(names, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*names: Optional[str]) -> Optional[NamedSharding]:
+    mesh = _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_spec(names, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Parameter spec resolution by pytree path
+# ---------------------------------------------------------------------------
+
+# Ordered (key-substring → logical axes per trailing dims) rules.  The logical
+# names are matched against the *last* len(names) dims of the parameter; any
+# leading dims (e.g. the stacked scan-layer dim) get the "layers" rule (= None).
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    ("tok_embed",        ("vocab", "embed")),
+    ("pos_embed",        (None, "embed")),
+    ("lm_head",          ("embed", "vocab")),
+    # attention
+    ("w_q",              ("embed", "heads")),
+    ("w_k",              ("embed", "kv_heads")),
+    ("w_v",              ("embed", "kv_heads")),
+    ("w_o",              ("heads", "embed")),
+    # MLA
+    ("w_dq",             ("embed", "mla_rank")),
+    ("w_uq",             ("mla_rank", "heads")),
+    ("w_dkv",            ("embed", "mla_rank")),
+    ("w_kr",             ("embed", None)),
+    ("w_uk",             ("mla_rank", "heads")),
+    ("w_uv",             ("mla_rank", "heads")),
+    # dense mlp
+    ("w_gate",           ("embed", "ffn")),
+    ("w_up",             ("embed", "ffn")),
+    ("w_down",           ("ffn", "embed")),
+    # moe
+    ("router",           ("embed", "experts")),
+    ("moe_gate",         ("experts", "embed", "ffn")),
+    ("moe_up",           ("experts", "embed", "ffn")),
+    ("moe_down",         ("experts", "ffn", "embed")),
+    ("shared_gate",      ("embed", "ffn")),
+    ("shared_up",        ("embed", "ffn")),
+    ("shared_down",      ("ffn", "embed")),
+    # ssm (mamba2)
+    ("in_proj",          ("embed", "ssm_inner")),
+    ("out_proj",         ("ssm_inner", "embed")),
+    ("conv_w",           (None, "ssm_inner")),
+    ("conv_b",           ("ssm_inner",)),
+    ("A_log",            (None,)),
+    ("dt_bias",          (None,)),
+    ("D_skip",           (None,)),
+    # rg-lru / hybrid
+    ("lru_in",           ("embed", "lru")),
+    ("lru_out",          ("lru", "embed")),
+    ("lru_a",            ("lru",)),
+    ("lru_gate",         (None, "lru")),
+    # lstm / small models — replicated
+    ("lstm",             ()),
+    ("conv",             ()),
+    ("dense",            ()),
+    ("bias",             ()),
+    # norms — replicated
+    ("scale",            ()),
+    ("norm",             ()),
+)
+
+
+def param_logical_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    """Logical axes for a parameter given its pytree path string + rank."""
+    for key, names in _PARAM_RULES:
+        if key in path:
+            names = tuple(names)[-ndim:] if len(names) > ndim else names
+            lead = ndim - len(names)
+            return ("layers",) * lead + tuple(names)
+    return (None,) * ndim
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def param_specs(params, mesh: Optional[Mesh] = None,
+                rules: Optional[AxisRules] = None):
+    """PartitionSpec pytree matching ``params`` (by path-name rules)."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+
+    def spec_for(path, leaf):
+        names = param_logical_axes(_path_str(path), leaf.ndim)
+        return logical_spec(names, mesh, rules)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def param_shardings(params, mesh: Optional[Mesh] = None,
+                    rules: Optional[AxisRules] = None):
+    """NamedSharding pytree for params (None tree if no mesh)."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return jax.tree.map(lambda _: None, params)
+    specs = param_specs(params, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

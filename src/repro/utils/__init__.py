@@ -1,0 +1,12 @@
+from repro.utils.tree import (
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_axpy,
+    tree_dot,
+    tree_norm,
+    tree_zeros_like,
+    tree_size,
+    tree_bytes,
+    tree_cast,
+)

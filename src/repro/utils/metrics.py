@@ -1,0 +1,69 @@
+"""JSONL metrics logging (training-run observability substrate).
+
+Append-only, crash-safe (one flush per record), dependency-free:
+
+    logger = MetricsLogger("runs/exp1")
+    logger.log(step=10, loss=2.31, grad_norm=0.8)
+    ...
+    rows = read_metrics("runs/exp1/metrics.jsonl")
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+
+class MetricsLogger:
+    def __init__(self, run_dir: str, filename: str = "metrics.jsonl",
+                 meta: Optional[Dict[str, Any]] = None):
+        os.makedirs(run_dir, exist_ok=True)
+        self.path = os.path.join(run_dir, filename)
+        self._f = open(self.path, "a", buffering=1)
+        self._t0 = time.time()
+        if meta:
+            self._write({"_meta": _plain(meta)})
+
+    def log(self, step: Optional[int] = None, **values) -> None:
+        rec: Dict[str, Any] = {"t": round(time.time() - self._t0, 4)}
+        if step is not None:
+            rec["step"] = int(step)
+        rec.update({k: _plain(v) for k, v in values.items()})
+        self._write(rec)
+
+    def _write(self, rec: Dict[str, Any]) -> None:
+        self._f.write(json.dumps(rec) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+def _plain(v: Any) -> Any:
+    """Coerce jax/numpy scalars and containers to JSON-safe python."""
+    if hasattr(v, "item") and getattr(v, "ndim", 1) == 0:
+        return v.item()
+    if isinstance(v, dict):
+        return {k: _plain(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_plain(x) for x in v]
+    if isinstance(v, float) and v != v:          # NaN → null
+        return None
+    return v
+
+
+def read_metrics(path: str) -> List[Dict[str, Any]]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows

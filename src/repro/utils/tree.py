@@ -1,0 +1,64 @@
+"""Pytree arithmetic helpers used across the framework.
+
+All helpers are pure and jit-friendly; they operate leaf-wise on arbitrary
+pytrees of arrays (model parameters, gradients, optimizer state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    """Leaf-wise a + b."""
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    """Leaf-wise a - b."""
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(a, s):
+    """Leaf-wise s * a for scalar s."""
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x, y):
+    """Leaf-wise alpha * x + y (BLAS axpy)."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_dot(a, b):
+    """Sum over all leaves of <a_i, b_i> (flattened inner product)."""
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.asarray(0.0))
+
+
+def tree_norm(a):
+    """Global L2 norm over the whole pytree."""
+    sq = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), a)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.asarray(0.0, jnp.float32)))
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_size(a) -> int:
+    """Total number of scalar parameters in the pytree (python int)."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    """Total number of bytes of the pytree (python int)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_cast(a, dtype):
+    """Cast every floating leaf to `dtype`; leave integer leaves alone."""
+    def _cast(x):
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree.map(_cast, a)

@@ -1,0 +1,2 @@
+from repro.wireless.channel import EdgeNetwork, sample_channels
+from repro.wireless.timing import compute_time, upload_time, round_time

@@ -1,0 +1,80 @@
+"""Mobile-edge wireless model — Sec. III-A (Eq. 9) + Table I parameters.
+
+UEs are dropped uniformly in a cell of radius R around the BS; uplink rates
+follow OFDMA with per-UE bandwidth b:  r = b·ln(1 + p·h·d^{−κ} / (b·N₀)),
+with Rayleigh small-scale fading h resampled per communication round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.config import WirelessConfig
+from repro.core.bandwidth import UEChannel
+
+
+def _noise_w_per_hz(n0_dbm_per_hz: float) -> float:
+    return 10.0 ** (n0_dbm_per_hz / 10.0) / 1000.0
+
+
+@dataclass
+class EdgeNetwork:
+    """A drop of n UEs in the cell: static geometry + per-UE compute speeds."""
+    cfg: WirelessConfig
+    n_ues: int
+    distances: np.ndarray          # [n] m
+    cpu_freq: np.ndarray           # [n] Hz — heterogeneous CPUs (stragglers!)
+    rng: np.random.Generator
+
+    @classmethod
+    def drop(cls, cfg: WirelessConfig, n_ues: int, seed: int = 0,
+             uniform_distance: bool = False) -> "EdgeNetwork":
+        rng = np.random.default_rng(seed)
+        if uniform_distance:
+            distances = np.full(n_ues, cfg.cell_radius_m / 2.0)
+        else:
+            # uniform in the disc → sqrt for radius; min 5 m
+            distances = np.maximum(
+                cfg.cell_radius_m * np.sqrt(rng.uniform(size=n_ues)), 5.0)
+        # CPU frequencies log-uniform over the heterogeneity ratio
+        ratio = max(cfg.cpu_hetero, 1.0)
+        cpu = cfg.cpu_freq_hz * np.exp(
+            rng.uniform(np.log(1.0 / ratio), 0.0, size=n_ues))
+        return cls(cfg=cfg, n_ues=n_ues, distances=distances, cpu_freq=cpu,
+                   rng=rng)
+
+    # ------------------------------------------------------------------
+    def sample_fading(self) -> np.ndarray:
+        """Rayleigh small-scale coefficients h_k^i for one round (Table I:
+        scale parameter 40)."""
+        return self.rng.rayleigh(scale=self.cfg.rayleigh_scale,
+                                 size=self.n_ues)
+
+    def channel(self, ue: int, h: Optional[float] = None) -> UEChannel:
+        cfg = self.cfg
+        hval = float(h) if h is not None else float(self.sample_fading()[ue])
+        return UEChannel(p=cfg.tx_power_w, h=hval,
+                         dist=float(self.distances[ue]),
+                         kappa=cfg.path_loss_exp,
+                         n0=_noise_w_per_hz(cfg.noise_dbm_per_hz))
+
+    def channels(self, h: Optional[np.ndarray] = None) -> list:
+        h = h if h is not None else self.sample_fading()
+        return [self.channel(i, h[i]) for i in range(self.n_ues)]
+
+    def mean_rates(self, bandwidth_per_ue: Optional[float] = None
+                   ) -> np.ndarray:
+        """Expected uplink rate per UE at equal-split bandwidth (used to
+        derive distance-based η in Sec. VI-A-4)."""
+        from repro.core.bandwidth import uplink_rate
+        b = bandwidth_per_ue or self.cfg.total_bandwidth_hz / self.n_ues
+        h_mean = self.cfg.rayleigh_scale * np.sqrt(np.pi / 2.0)
+        return np.array([
+            float(uplink_rate(b, self.channel(i, h_mean)))
+            for i in range(self.n_ues)])
+
+
+def sample_channels(cfg: WirelessConfig, n_ues: int, seed: int = 0):
+    return EdgeNetwork.drop(cfg, n_ues, seed)

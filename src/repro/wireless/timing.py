@@ -1,0 +1,37 @@
+"""Latency model — Eq. (10)–(12).
+
+* ``compute_time``  Tcmp = c_i·d_i / ϑ_i         (Eq. 11)
+* ``upload_time``   Tcom = Z / r_k^i             (Eq. 10), Z in bits
+* ``round_time``    T_k  = max over scheduled UEs (C1.1)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bandwidth import UEChannel, uplink_rate
+
+LN2 = float(np.log(2.0))
+
+
+def compute_time(cycles_per_sample: float, n_samples: int,
+                 cpu_freq_hz: float) -> float:
+    return cycles_per_sample * n_samples / cpu_freq_hz
+
+
+def upload_time(z_bits: float, bandwidth_hz: float, ch: UEChannel) -> float:
+    """Z bits over rate r(b) nats/s → seconds (bits × ln2 = nats)."""
+    r = float(uplink_rate(bandwidth_hz, ch))
+    if r <= 0:
+        return float("inf")
+    return z_bits * LN2 / r
+
+
+def round_time(times: np.ndarray) -> float:
+    """T_k = max_{i∈A_k} T_k^i."""
+    return float(np.max(times))
+
+
+def model_bits(params, bits_per_param: int = 32) -> float:
+    """Z — payload size for one gradient upload."""
+    import jax
+    return float(sum(x.size for x in jax.tree.leaves(params))) * bits_per_param

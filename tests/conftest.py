@@ -1,0 +1,22 @@
+import os
+import sys
+
+# tests must see the real host device count (1), NOT the dry-run's 512 —
+# never set XLA_FLAGS here.  Subprocess tests set their own flags.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def nprng():
+    return np.random.default_rng(0)

@@ -1,0 +1,96 @@
+"""Theorems 2–4: Lambert-W, rate inversion, equal-finish optimality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandwidth import (UEChannel, bandwidth_for_rate,
+                                  bandwidth_for_time, equal_finish_allocation,
+                                  lambertw, uplink_rate,
+                                  weighted_equal_rate_allocation)
+
+N0 = 10 ** (-174.0 / 10.0) / 1000.0
+
+
+def _ch(h=40.0, d=100.0):
+    return UEChannel(p=0.01, h=h, dist=d, kappa=3.8, n0=N0)
+
+
+@given(st.floats(1e-3, 50.0))
+@settings(max_examples=100, deadline=None)
+def test_lambertw_principal_inverse(x):
+    w = float(lambertw(x * np.exp(x), branch=0))
+    assert abs(w - x) < 1e-6 * max(1.0, x)
+
+
+@given(st.floats(-60.0, -1.0001))
+@settings(max_examples=100, deadline=None)
+def test_lambertw_minus1_inverse(x):
+    w = float(lambertw(x * np.exp(x), branch=-1))
+    assert abs(w - x) < 1e-5 * max(1.0, abs(x))
+
+
+@given(st.floats(1e3, 1e6), st.floats(1.0, 200.0), st.floats(10.0, 200.0))
+@settings(max_examples=60, deadline=None)
+def test_rate_monotone_in_bandwidth(b, h, d):
+    """Theorem 2's premise: r(b) strictly increasing (Eq. 31)."""
+    ch = _ch(h, d)
+    assert uplink_rate(b * 1.01, ch) > uplink_rate(b, ch)
+
+
+@given(st.floats(1e3, 5e5), st.floats(5.0, 200.0), st.floats(10.0, 200.0))
+@settings(max_examples=60, deadline=None)
+def test_bandwidth_for_rate_inverts_rate(b, h, d):
+    ch = _ch(h, d)
+    r = float(uplink_rate(b, ch))
+    b2 = bandwidth_for_rate(r, ch)
+    assert abs(b2 - b) / b < 1e-5
+
+
+def test_equal_finish_times_theorem2():
+    """All scheduled UEs finish at the same instant under the optimum."""
+    z = [4e5, 4e5, 4e5]
+    tc = [0.05, 0.15, 0.30]
+    chans = [_ch(40, 50), _ch(25, 120), _ch(15, 180)]
+    b, t_star = equal_finish_allocation(z, tc, chans, 1e6)
+    assert abs(b.sum() - 1e6) / 1e6 < 1e-6
+    finish = [tc[i] + z[i] * np.log(2) / uplink_rate(b[i], chans[i])
+              for i in range(3)]
+    assert np.ptp(finish) < 1e-3 * t_star
+    assert abs(np.mean(finish) - t_star) < 1e-2 * t_star
+
+
+def test_equal_finish_beats_equal_split():
+    """Theorem-2 allocation ≤ round time of the naive equal split."""
+    z = [4e5] * 3
+    tc = [0.05, 0.1, 0.2]
+    chans = [_ch(40, 50), _ch(25, 120), _ch(15, 180)]
+    _, t_opt = equal_finish_allocation(z, tc, chans, 1e6)
+    b_eq = 1e6 / 3
+    t_eq = max(tc[i] + z[i] * np.log(2) / uplink_rate(b_eq, chans[i])
+               for i in range(3))
+    assert t_opt <= t_eq * (1 + 1e-9)
+
+
+def test_bandwidth_for_time_consistency():
+    ch = _ch()
+    z, tcmp, t = 4e5, 0.1, 0.5
+    b = bandwidth_for_time(z, t, tcmp, ch)
+    # uploading z bits at rate r(b) should take exactly t − tcmp
+    t_up = z * np.log(2) / uplink_rate(b, ch)
+    assert abs(t_up - (t - tcmp)) / (t - tcmp) < 1e-6
+
+
+def test_weighted_equal_rate_allocation():
+    """The 'other extreme' of Theorem 4: r_i/η_i equalised, Σb = B."""
+    eta = np.array([0.5, 0.3, 0.2])
+    chans = [_ch(40, 50), _ch(25, 120), _ch(15, 180)]
+    b = weighted_equal_rate_allocation(eta, chans, 1e6)
+    assert abs(b.sum() - 1e6) / 1e6 < 1e-6
+    r = np.array([float(uplink_rate(b[i], chans[i])) for i in range(3)])
+    ratios = r / eta
+    assert np.ptp(ratios) / ratios.mean() < 1e-2
+
+
+def test_infeasible_time_returns_inf():
+    ch = _ch()
+    assert bandwidth_for_time(1e6, 0.05, 0.1, ch) == float("inf")

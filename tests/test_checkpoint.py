@@ -1,0 +1,43 @@
+"""Checkpoint round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_checkpoint, load_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.models import build_model
+
+
+def test_roundtrip_nested(tmp_path, rng):
+    tree = {"a": jax.random.normal(rng, (4, 4)),
+            "b": {"c": jnp.arange(7), "d": jnp.float32(3.5).reshape(())}}
+    f = save_checkpoint(str(tmp_path), tree, step=3)
+    back = load_checkpoint(f, like=tree)
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), tree, back)
+
+
+def test_roundtrip_model_params(tmp_path, rng):
+    cfg = get_config("yi_6b").reduced()
+    model = build_model(cfg)
+    params = model.init(rng)
+    f = save_checkpoint(str(tmp_path), params, step=1)
+    back = load_checkpoint(f, like=params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_checkpoint(tmp_path, rng):
+    tree = {"a": jnp.zeros(3)}
+    save_checkpoint(str(tmp_path), tree, step=1)
+    f2 = save_checkpoint(str(tmp_path), tree, step=12)
+    assert latest_checkpoint(str(tmp_path)) == f2
+
+
+def test_shape_mismatch_raises(tmp_path, rng):
+    f = save_checkpoint(str(tmp_path), {"a": jnp.zeros((3,))})
+    with pytest.raises(ValueError):
+        load_checkpoint(f, like={"a": jnp.zeros((4,))})

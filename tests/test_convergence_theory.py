@@ -1,0 +1,58 @@
+"""Theorem 1 / Corollary 1 analytic expressions."""
+import math
+
+import pytest
+
+from repro.core.convergence import (SmoothnessParams, corollary1_rates,
+                                    fosp_bound, gamma_F2, max_feasible_beta,
+                                    sigma_F2, smoothness_F, step_condition)
+
+
+def test_lemma1_smoothness():
+    p = SmoothnessParams(L=2.0, C=3.0, rho=0.5)
+    assert smoothness_F(p, alpha=0.1) == pytest.approx(4 * 2 + 0.1 * 0.5 * 3)
+
+
+def test_lemma2_variance_decreases_with_batch():
+    p = SmoothnessParams()
+    small = sigma_F2(p, 0.05, d_in=4, d_o=4, d_h=4)
+    big = sigma_F2(p, 0.05, d_in=64, d_o=64, d_h=64)
+    assert big < small
+    assert big > 0
+
+
+def test_lemma3_gamma():
+    p = SmoothnessParams(C=2.0, gamma_H=0.5, gamma_G=0.1)
+    got = gamma_F2(p, alpha=0.1)
+    assert got == pytest.approx(3 * 4 * 0.01 * 0.25 + 192 * 0.01)
+
+
+def test_step_condition_and_max_beta():
+    l_f, s = 4.0, 5
+    beta = max_feasible_beta(l_f, s)
+    assert step_condition(l_f, beta, s) == pytest.approx(1.0, abs=1e-9)
+    assert step_condition(l_f, beta * 0.5, s) < 1.0
+    assert step_condition(l_f, beta * 2.0, s) > 1.0
+
+
+def test_bound_decreases_in_K_increases_in_A():
+    kw = dict(loss_gap=1.0, beta=0.01, s=5, l_f=4.0, sig_f2=1.0, gam_f2=1.0)
+    b1 = fosp_bound(k=100, a=4, **kw)
+    b2 = fosp_bound(k=1000, a=4, **kw)
+    b3 = fosp_bound(k=100, a=16, **kw)
+    assert b2 < b1          # more rounds → tighter
+    assert b3 > b1          # more (stale-capable) participants → looser √A term
+
+
+def test_bound_increases_with_staleness():
+    kw = dict(loss_gap=1.0, beta=0.01, k=100, a=4, l_f=4.0, sig_f2=1.0,
+              gam_f2=1.0)
+    assert fosp_bound(s=10, **kw) > fosp_bound(s=1, **kw)
+
+
+def test_corollary1_scalings():
+    r = corollary1_rates(0.1)
+    assert r["K"] == pytest.approx(1e3)
+    assert r["A"] == pytest.approx(1e2)
+    assert r["S"] == pytest.approx(1e1)
+    assert r["beta"] == pytest.approx(1e-2)

@@ -1,0 +1,66 @@
+"""Non-iid partitioner + synthetic dataset properties (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (partition_noniid, synthetic_mnist,
+                        synthetic_shakespeare)
+from repro.data.partition import sequence_clients
+
+
+@given(st.integers(2, 20), st.integers(1, 10), st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_clients_hold_at_most_l_labels(n_clients, l, seed):
+    data = synthetic_mnist(n=800, seed=seed)
+    clients = partition_noniid(data, n_clients, l, seed=seed)
+    assert len(clients) == n_clients
+    for c in clients:
+        # ≤ l classes (a tiny shard may be padded with random extras)
+        assert len(c.labels_held) <= max(l, 1) + 2
+        assert len(c) >= 1
+
+
+def test_lower_l_is_more_heterogeneous():
+    data = synthetic_mnist(n=2000, seed=0)
+    c2 = partition_noniid(data, 10, 2, seed=0)
+    c8 = partition_noniid(data, 10, 8, seed=0)
+    mean_labels_2 = np.mean([len(c.labels_held) for c in c2])
+    mean_labels_8 = np.mean([len(c.labels_held) for c in c8])
+    assert mean_labels_2 < mean_labels_8
+
+
+def test_sizes_unbalanced():
+    data = synthetic_mnist(n=4000, seed=1)
+    clients = partition_noniid(data, 10, 4, seed=1)
+    sizes = np.array([len(c) for c in clients])
+    assert sizes.max() > 1.3 * sizes.min()      # "different local data size"
+
+
+def test_triplet_batches_independent():
+    data = synthetic_mnist(n=500, seed=2)
+    c = partition_noniid(data, 4, 4, seed=2)[0]
+    t = c.sample_triplet(8, 8, 8)
+    assert set(t) == {"inner", "outer", "hessian"}
+    assert not np.array_equal(t["inner"]["x"], t["outer"]["x"])
+
+
+def test_mnist_learnable_structure():
+    d = synthetic_mnist(n=1000, seed=0)
+    # same-class images correlate more than cross-class
+    x, y = d["x"].reshape(1000, -1), d["y"]
+    idx0 = np.where(y == 0)[0][:20]
+    idx1 = np.where(y == 1)[0][:20]
+    same = np.corrcoef(x[idx0[0]], x[idx0[1]])[0, 1]
+    cross = np.corrcoef(x[idx0[0]], x[idx1[0]])[0, 1]
+    assert same > cross
+
+
+def test_shakespeare_roles_differ():
+    roles = synthetic_shakespeare(n_roles=3, chars_per_role=500, seq_len=16)
+    clients = sequence_clients(roles, 3)
+    assert len(clients) == 3
+    t0 = clients[0].data["tokens"]
+    assert t0.shape[1] == 16
+    # targets are tokens shifted by one
+    tok, targ = clients[0].data["tokens"], clients[0].data["targets"]
+    assert np.array_equal(tok[0, 1:], targ[0, :-1])

@@ -1,0 +1,88 @@
+"""Multi-device lowering tests.
+
+Device count locks at first jax init, so these run in SUBPROCESSES with
+``--xla_force_host_platform_device_count=8`` and small meshes (2,4) /
+(2,2,2).  Reduced configs keep compiles fast; the full-size production-mesh
+sweep is ``python -m repro.launch.dryrun`` (see EXPERIMENTS.md §Dry-run).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding
+from repro.configs import get_config, get_shape
+from repro.config import ShapeConfig
+from repro.launch.mesh import make_mesh
+from repro.launch.specs import build_case, arch_rules
+
+arch, kind, multipod = sys.argv[1], sys.argv[2], sys.argv[3] == "multi"
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model")) if multipod \
+    else make_mesh((2, 4), ("data", "model"))
+cfg = get_config(arch).reduced()
+shape = {
+    "train":   ShapeConfig("t", seq_len=64, global_batch=8, kind="train"),
+    "prefill": ShapeConfig("p", seq_len=128, global_batch=8, kind="prefill"),
+    "decode":  ShapeConfig("d", seq_len=128, global_batch=8, kind="decode"),
+}[kind]
+rules = arch_rules(cfg, mesh)
+cohorts = 2 if (multipod and kind == "train") else None
+with sharding.use_mesh(mesh, rules):
+    case = build_case(cfg, shape, mesh, semi_sync_cohorts=cohorts, rules=rules)
+    jitted = jax.jit(case.fn, in_shardings=case.in_shardings,
+                     out_shardings=case.out_shardings)
+    lowered = jitted.lower(*case.args)
+    compiled = lowered.compile()
+cost = compiled.cost_analysis()
+print(json.dumps({"ok": True, "flops": float(cost.get("flops", 0.0))}))
+"""
+
+
+def _run(arch: str, kind: str, mesh: str):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", SCRIPT, arch, kind, mesh],
+        capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, f"{arch}/{kind}/{mesh}:\n{out.stderr[-3000:]}"
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["ok"]
+    return rec
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["yi_6b", "mixtral_8x22b", "mamba2_370m",
+                                  "recurrentgemma_2b"])
+def test_single_pod_train_lowers(arch):
+    rec = _run(arch, "train", "single")
+    assert rec["flops"] > 0
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["yi_6b", "deepseek_v2_236b"])
+def test_multi_pod_semi_sync_train_lowers(arch):
+    _run(arch, "train", "multi")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch", ["yi_6b", "musicgen_large",
+                                  "llama32_vision_11b"])
+def test_decode_lowers(arch):
+    _run(arch, "decode", "single")
+
+
+@pytest.mark.slow
+def test_prefill_lowers():
+    _run("starcoder2_15b", "prefill", "single")

@@ -1,0 +1,85 @@
+"""Cited-work algorithm extensions: pFedMe [11] client and SAFA/FedSA-style
+staleness-discounted aggregation [20][21]."""
+import numpy as np
+import pytest
+
+from repro.config import ExperimentConfig, FLConfig
+from repro.configs import get_config
+from repro.core.server import SemiSyncServer, ServerConfig
+from repro.data import partition_noniid, synthetic_mnist
+from repro.fl.simulation import run_simulation
+from repro.models import build_model
+
+
+def _payload(v):
+    return {"w": np.array([v], dtype=np.float32)}
+
+
+def test_staleness_discount_weights_fresh_higher():
+    """λ<1: a fresh gradient (τ=0) outweighs a stale one (τ=2)."""
+    cfg = ServerConfig(n_ues=3, participants_per_round=2, staleness_bound=10,
+                       beta=1.0, staleness_discount=0.5)
+    srv = SemiSyncServer(_payload(0.0), cfg)
+    # advance two rounds via UE0/UE1 so UE2 (never refreshed) has τ=2
+    srv.on_arrival(0, _payload(0.0)); srv.on_arrival(1, _payload(0.0))
+    srv.on_arrival(0, _payload(0.0)); srv.on_arrival(1, _payload(0.0))
+    w_before = float(srv.params["w"][0])
+    srv.on_arrival(0, _payload(1.0))        # fresh, τ=0, weight 1
+    res = srv.on_arrival(2, _payload(1.0))  # stale, τ=2, weight 0.25
+    # weighted mean = (1·1 + 0.25·1)/1.25 = 1 → same as unweighted here for
+    # identical payloads; use DIFFERENT payloads to discriminate:
+    srv2 = SemiSyncServer(_payload(0.0), cfg)
+    srv2.on_arrival(0, _payload(0.0)); srv2.on_arrival(1, _payload(0.0))
+    srv2.on_arrival(0, _payload(0.0)); srv2.on_arrival(1, _payload(0.0))
+    base = float(srv2.params["w"][0])
+    srv2.on_arrival(0, _payload(4.0))       # fresh says +4
+    r2 = srv2.on_arrival(2, _payload(0.0))  # stale says 0
+    # weighted mean = (1·4 + 0.25·0)/1.25 = 3.2 → Δw = −β·3.2
+    got = float(r2["params"]["w"][0]) - base
+    assert abs(got + 3.2) < 1e-5, got
+
+    # λ=1 (paper) gives the plain mean = 2 → Δw = −2
+    cfg1 = ServerConfig(n_ues=3, participants_per_round=2, staleness_bound=10,
+                        beta=1.0, staleness_discount=1.0)
+    srv3 = SemiSyncServer(_payload(0.0), cfg1)
+    srv3.on_arrival(0, _payload(0.0)); srv3.on_arrival(1, _payload(0.0))
+    srv3.on_arrival(0, _payload(0.0)); srv3.on_arrival(1, _payload(0.0))
+    base3 = float(srv3.params["w"][0])
+    srv3.on_arrival(0, _payload(4.0))
+    r3 = srv3.on_arrival(2, _payload(0.0))
+    assert abs(float(r3["params"]["w"][0]) - base3 + 2.0) < 1e-5
+
+
+@pytest.fixture(scope="module")
+def fl_setup():
+    cfg = ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        fl=FLConfig(n_ues=8, participants_per_round=3, staleness_bound=3,
+                    alpha=0.03, beta=0.07, inner_batch=16, outer_batch=16,
+                    hessian_batch=16))
+    model = build_model(cfg.model)
+    clients = partition_noniid(synthetic_mnist(n=1600, seed=13), 8, l=4,
+                               seed=13)
+    return cfg, model, clients
+
+
+def test_pfedme_converges(fl_setup):
+    cfg, model, clients = fl_setup
+    import dataclasses
+    cfg = dataclasses.replace(cfg, fl=dataclasses.replace(
+        cfg.fl, beta=0.005, pfedme_lambda=15.0, pfedme_steps=5))
+    res = run_simulation(cfg, model, clients, algorithm="pfedme", mode="semi",
+                         max_rounds=15, eval_every=15, seed=13)
+    assert np.isfinite(res.losses[-1])
+    assert res.losses[-1] < res.losses[0]
+
+
+def test_staleness_discount_in_simulation(fl_setup):
+    cfg, model, clients = fl_setup
+    import dataclasses
+    cfg = dataclasses.replace(cfg, fl=dataclasses.replace(
+        cfg.fl, staleness_discount=0.7))
+    res = run_simulation(cfg, model, clients, algorithm="perfed", mode="semi",
+                         max_rounds=12, eval_every=12, seed=13)
+    assert np.isfinite(res.losses[-1])
+    assert res.losses[-1] < res.losses[0]

@@ -1,0 +1,178 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhld
+from repro.kernels.fused_adam import fused_adam_flat
+from repro.kernels.ssd_scan import ssd_chunk_pallas
+from repro.kernels.stale_aggregate import stale_aggregate_flat
+from repro.kernels import ops
+
+
+# ---------------------------------------------------------------- flash ----
+
+FLASH_SHAPES = [
+    # (B, Hq, Hkv, L, D, block)
+    (1, 2, 2, 64, 32, 32),      # MHA
+    (2, 4, 2, 96, 32, 32),      # GQA 2:1, ragged L vs block
+    (1, 8, 1, 128, 64, 64),     # MQA
+    (1, 2, 2, 50, 16, 32),      # L not divisible by block (padding path)
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,l,d,blk", FLASH_SHAPES)
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("window", [0, 24])
+def test_flash_attention_matches_ref(b, hq, hkv, l, d, blk, causal, window,
+                                     rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (b, hq, l, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, l, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, l, d), jnp.float32)
+    got = flash_attention_bhld(q, k, v, causal=causal, window=window,
+                               block_q=blk, block_k=blk)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype, rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (1, 2, 64, 32)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 2, 64, 32)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 2, 64, 32)).astype(dtype)
+    got = flash_attention_bhld(q, k, v, causal=True, block_q=32, block_k=32)
+    want = ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert got.dtype == dtype
+
+
+def test_flash_model_layout_wrapper(rng):
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 64, 4, 32))
+    k = jax.random.normal(ks[1], (2, 64, 2, 32))
+    v = jax.random.normal(ks[2], (2, 64, 2, 32))
+    got = ops.flash_attention(q, k, v, causal=True)
+    want = jnp.moveaxis(ref.attention_ref(
+        jnp.moveaxis(q, 1, 2), jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2),
+        causal=True), 1, 2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+# ------------------------------------------------------------------ ssd ----
+
+SSD_SHAPES = [
+    (1, 2, 32, 2, 8, 16),
+    (2, 3, 64, 4, 16, 8),
+    (1, 1, 16, 1, 4, 4),
+]
+
+
+@pytest.mark.parametrize("b,nc,q,h,p,n", SSD_SHAPES)
+def test_ssd_chunk_kernel_matches_naive_recurrence(b, nc, q, h, p, n, rng):
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (b, nc, q, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, nc, q, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    bm = jax.random.normal(ks[3], (b, nc, q, n), jnp.float32)
+    cm = jax.random.normal(ks[4], (b, nc, q, n), jnp.float32)
+    y, st, dec, _ = ssd_chunk_pallas(x, dt, a, bm, cm)
+    for ci in range(nc):
+        yr, sr, dr = ref.ssd_chunk_ref(x[:, ci], dt[:, ci], a, bm[:, ci],
+                                       cm[:, ci])
+        np.testing.assert_allclose(np.asarray(y[:, ci]), np.asarray(yr),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(st[:, ci]), np.asarray(sr),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(dec[:, ci]), np.asarray(dr),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_ssd_ops_matches_model_implementation(rng):
+    """ops.ssd_chunked (Pallas) ≡ models.ssm.ssd_chunked (pure jnp)."""
+    from repro.models.ssm import ssd_chunked as ssd_jnp
+    bs, l, h, p, n = 2, 128, 3, 8, 16
+    ks = jax.random.split(rng, 5)
+    x = jax.random.normal(ks[0], (bs, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, l, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)))
+    bm = jax.random.normal(ks[3], (bs, l, n))
+    cm = jax.random.normal(ks[4], (bs, l, n))
+    y1, s1 = ssd_jnp(x, dt, a, bm, cm, 32)
+    y2, s2 = ops.ssd_chunked(x, dt, a, bm, cm, 32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)
+
+
+# ----------------------------------------------------------------- adam ----
+
+@pytest.mark.parametrize("n", [100, 4096, 5000])
+@pytest.mark.parametrize("t", [1, 10])
+def test_fused_adam_matches_ref(n, t, rng):
+    ks = jax.random.split(rng, 4)
+    p = jax.random.normal(ks[0], (n,))
+    m = jax.random.normal(ks[1], (n,)) * 0.1
+    v = jnp.abs(jax.random.normal(ks[2], (n,))) * 0.01
+    g = jax.random.normal(ks[3], (n,))
+    np_, nm, nv = fused_adam_flat(p, m, v, g, lr=3e-3, t=t)
+    rp, rm, rv = ref.adam_ref(p, m, v, g, lr=3e-3, b1=0.9, b2=0.95,
+                              eps=1e-8, t=t)
+    np.testing.assert_allclose(np.asarray(np_), np.asarray(rp), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(nm), np.asarray(rm), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(nv), np.asarray(rv), atol=1e-6)
+
+
+def test_fused_adam_bf16_params(rng):
+    p = jax.random.normal(rng, (512,)).astype(jnp.bfloat16)
+    m = jnp.zeros(512); v = jnp.zeros(512)
+    g = jax.random.normal(rng, (512,))
+    np_, _, _ = fused_adam_flat(p, m, v, g, lr=1e-2, t=1)
+    assert np_.dtype == jnp.bfloat16
+
+
+def test_fused_adam_tree_matches_optimizer(rng):
+    """kernel pytree wrapper ≡ repro.optim.adam on a small param tree."""
+    from repro.optim import adam
+    params = {"a": jax.random.normal(rng, (64, 8)),
+              "b": {"c": jax.random.normal(rng, (100,))}}
+    grads = jax.tree.map(lambda x: jnp.ones_like(x) * 0.1, params)
+    opt = adam(b1=0.9, b2=0.95, eps=1e-8)
+    st = opt.init(params)
+    want, _ = opt.update(grads, st, params, 1e-2)
+    got, _, _ = ops.fused_adam_tree(params, st["m"], st["v"], grads,
+                                    lr=1e-2, t=1)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-6), got, want)
+
+
+# ------------------------------------------------------- stale aggregate ---
+
+@pytest.mark.parametrize("c,n", [(2, 100), (4, 4096), (3, 9000)])
+def test_stale_aggregate_matches_ref(c, n, rng):
+    ks = jax.random.split(rng, 3)
+    p = jax.random.normal(ks[0], (n,))
+    buf = jax.random.normal(ks[1], (c, n))
+    mask = (jax.random.uniform(ks[2], (c,)) > 0.4).astype(jnp.float32)
+    got = stale_aggregate_flat(p, buf, mask, beta=0.07)
+    want = ref.stale_aggregate_ref(p, buf, mask, beta=0.07)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_stale_aggregate_semi_sync_equivalence(rng):
+    """Kernel ≡ the semi_sync masked-psum aggregation (β-SGD, no clip)."""
+    c, n = 3, 257
+    buf = jax.random.normal(rng, (c, n))
+    p = jax.random.normal(jax.random.fold_in(rng, 1), (n,))
+    mask = jnp.array([1.0, 0.0, 1.0])
+    beta = 0.07
+    got = stale_aggregate_flat(p, buf, mask, beta=beta)
+    agg = jnp.einsum("cn,c->n", buf, mask) / mask.sum()
+    want = p - beta * agg
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)

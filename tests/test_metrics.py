@@ -1,0 +1,26 @@
+"""Metrics logger round-trips."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.metrics import MetricsLogger, read_metrics
+
+
+def test_jsonl_roundtrip(tmp_path):
+    with MetricsLogger(str(tmp_path), meta={"arch": "yi_6b"}) as log:
+        log.log(step=0, loss=2.5, grad_norm=jnp.float32(1.25))
+        log.log(step=1, loss=np.float64(2.25), acc=float("nan"),
+                nested={"a": jnp.int32(3)})
+    rows = read_metrics(str(tmp_path / "metrics.jsonl"))
+    assert rows[0]["_meta"]["arch"] == "yi_6b"
+    assert rows[1]["step"] == 0 and rows[1]["loss"] == 2.5
+    assert abs(rows[1]["grad_norm"] - 1.25) < 1e-9
+    assert rows[2]["acc"] is None                 # NaN → null
+    assert rows[2]["nested"]["a"] == 3
+    assert all("t" in r for r in rows[1:])
+
+
+def test_append_mode(tmp_path):
+    MetricsLogger(str(tmp_path)).log(step=0, x=1)
+    MetricsLogger(str(tmp_path)).log(step=1, x=2)
+    rows = read_metrics(str(tmp_path / "metrics.jsonl"))
+    assert [r["x"] for r in rows] == [1, 2]

@@ -1,0 +1,101 @@
+"""Eq. (5)/(7) meta-gradient correctness against the autodiff oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ModelConfig
+from repro.core import perfed
+from repro.models import build_model
+from repro.utils import tree_norm, tree_sub
+
+
+def _quadratic_model():
+    """f(w; x, y) = mean((x·w1 + b − y)^2) — analytically tractable."""
+    class M:
+        def init(self, rng):
+            k1, k2 = jax.random.split(rng)
+            return {"w": jax.random.normal(k1, (5, 3)),
+                    "b": jax.random.normal(k2, (3,))}
+
+        def loss(self, params, batch, rng=None):
+            pred = batch["x"] @ params["w"] + params["b"]
+            return jnp.mean(jnp.square(pred - batch["y"])), {}
+    return M()
+
+
+@pytest.fixture
+def setup():
+    model = _quadratic_model()
+    rng = jax.random.PRNGKey(1)
+    params = model.init(rng)
+    kx, ky = jax.random.split(rng)
+    batch = {"x": jax.random.normal(kx, (32, 5)),
+             "y": jax.random.normal(ky, (32, 3))}
+    return model, params, batch
+
+
+def test_perfed_grad_matches_autodiff_oracle(setup):
+    """With identical D_in = D_o = D_h, Eq. (7) must equal d/dw f(w−α∇f(w))."""
+    model, params, batch = setup
+    alpha = 0.05
+    batches = {"inner": batch, "outer": batch, "hessian": batch}
+    got = perfed.perfed_grad(model.loss, params, batches, alpha)
+    want = perfed.perfed_grad_exact(model.loss, params, batch, alpha)
+    err = float(tree_norm(tree_sub(got, want)) / tree_norm(want))
+    assert err < 1e-5, err
+
+
+def test_perfed_grad_on_neural_model():
+    """Same identity through a real nonconvex model (2-layer DNN)."""
+    cfg = ModelConfig(name="mnist_dnn", family="small", d_model=16,
+                      vocab_size=10, dtype="float32")
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(2)
+    params = model.init(rng)
+    batch = {"x": jax.random.normal(rng, (8, 28, 28)),
+             "y": jax.random.randint(rng, (8,), 0, 10)}
+    batches = {"inner": batch, "outer": batch, "hessian": batch}
+    got = perfed.perfed_grad(model.loss, params, batches, 0.03)
+    want = perfed.perfed_grad_exact(model.loss, params, batch, 0.03)
+    err = float(tree_norm(tree_sub(got, want)) / tree_norm(want))
+    assert err < 1e-4, err
+
+
+def test_first_order_drops_hessian(setup):
+    model, params, batch = setup
+    batches = {"inner": batch, "outer": batch, "hessian": batch}
+    fo = perfed.perfed_grad(model.loss, params, batches, 0.05,
+                            first_order=True)
+    w_ad = perfed.adapt(model.loss, params, batch, 0.05)
+    want = jax.grad(lambda p: model.loss(p, batch)[0])(w_ad)
+    err = float(tree_norm(tree_sub(fo, want)))
+    assert err < 1e-6
+
+    full = perfed.perfed_grad(model.loss, params, batches, 0.05)
+    assert float(tree_norm(tree_sub(full, fo))) > 1e-4  # Hessian term matters
+
+
+def test_adapt_reduces_loss(setup):
+    model, params, batch = setup
+    l0 = float(model.loss(params, batch)[0])
+    adapted = perfed.adapt(model.loss, params, batch, 0.05)
+    l1 = float(model.loss(adapted, batch)[0])
+    assert l1 < l0
+
+
+def test_perfed_loss_value(setup):
+    model, params, batch = setup
+    batches = {"inner": batch, "outer": batch}
+    got = float(perfed.perfed_loss(model.loss, params, batches, 0.05))
+    adapted = perfed.adapt(model.loss, params, batch, 0.05)
+    want = float(model.loss(adapted, batch)[0])
+    assert abs(got - want) < 1e-6
+
+
+def test_alpha_zero_recovers_plain_gradient(setup):
+    model, params, batch = setup
+    batches = {"inner": batch, "outer": batch, "hessian": batch}
+    got = perfed.perfed_grad(model.loss, params, batches, 0.0)
+    want = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    assert float(tree_norm(tree_sub(got, want))) < 1e-6

@@ -1,0 +1,48 @@
+"""Footnote-1 extension: transmit-power control (inverse of Eq. 9 in p)."""
+import numpy as np
+import pytest
+
+from repro.core.bandwidth import (UEChannel, min_power_equal_finish,
+                                  power_for_time, uplink_rate)
+
+N0 = 10 ** (-174.0 / 10.0) / 1000.0
+
+
+def _ch(p=0.01, h=40.0, d=100.0):
+    return UEChannel(p=p, h=h, dist=d, kappa=3.8, n0=N0)
+
+
+def test_power_for_time_inverts_rate():
+    ch = _ch()
+    z, tcmp, t, b = 4e5, 0.05, 0.4, 2e5
+    p = power_for_time(z, t, tcmp, b, ch)
+    # at that power, upload time must equal t − tcmp
+    ch2 = UEChannel(p=p, h=ch.h, dist=ch.dist, kappa=ch.kappa, n0=ch.n0)
+    t_up = z * np.log(2) / uplink_rate(b, ch2)
+    assert abs(t_up - (t - tcmp)) / (t - tcmp) < 1e-9
+
+
+def test_power_monotone_in_deadline():
+    ch = _ch()
+    p_tight = power_for_time(4e5, 0.2, 0.05, 2e5, ch)
+    p_loose = power_for_time(4e5, 0.8, 0.05, 2e5, ch)
+    assert p_tight > p_loose > 0
+
+
+def test_power_cap_infeasible():
+    ch = _ch()
+    assert power_for_time(1e7, 0.06, 0.05, 1e4, ch, p_max=0.01) == float("inf")
+    assert power_for_time(4e5, 0.04, 0.05, 2e5, ch) == float("inf")
+
+
+def test_min_power_equal_finish_vector():
+    chans = [_ch(d=50), _ch(d=120), _ch(d=190)]
+    z = [4e5] * 3
+    tcmp = [0.05, 0.1, 0.15]
+    b = [3e5, 3e5, 4e5]
+    p = min_power_equal_finish(z, tcmp, b, chans, t_star=0.5)
+    assert (p > 0).all() and np.isfinite(p).all()
+    # farther UE with same bandwidth needs more power
+    p2 = min_power_equal_finish([4e5, 4e5], [0.05, 0.05], [3e5, 3e5],
+                                [_ch(d=50), _ch(d=190)], t_star=0.5)
+    assert p2[1] > p2[0]

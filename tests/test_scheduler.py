@@ -1,0 +1,87 @@
+"""Algorithm 2 greedy scheduler + Eq. (42)/(43) — property-based."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import FLConfig
+from repro.core.scheduler import (estimate_A_K, greedy_schedule,
+                                  relative_frequencies, schedule_period,
+                                  schedule_staleness)
+
+
+@st.composite
+def eta_and_A(draw):
+    n = draw(st.integers(3, 24))
+    a = draw(st.integers(1, n))
+    k = draw(st.integers(1, 60))
+    raw = draw(st.lists(st.floats(0.05, 1.0), min_size=n, max_size=n))
+    eta = np.array(raw) / np.sum(raw)
+    return eta, a, k
+
+
+@given(eta_and_A())
+@settings(max_examples=60, deadline=None)
+def test_rows_sum_to_A(case):
+    eta, a, k = case
+    pi = greedy_schedule(eta, a, k)
+    assert pi.shape == (k, len(eta))
+    assert (pi.sum(axis=1) == a).all()            # Eq. (14)
+    assert ((pi == 0) | (pi == 1)).all()
+
+
+@given(eta_and_A())
+@settings(max_examples=30, deadline=None)
+def test_realised_eta_tracks_target(case):
+    eta, a, _ = case
+    k = 400
+    pi = greedy_schedule(eta, a, k)
+    realised = pi.sum(0) / (a * k)                # Eq. (15)
+    # a UE can participate at most once per round → realised ≤ 1/A; within
+    # that ceiling the greedy must track η (tiny-η UEs are floored by the
+    # "always schedule A per round" constraint, hence the tolerance)
+    tol = 0.05 + 1.0 / k
+    assert np.all(realised >= np.minimum(eta, 1.0 / a) - tol)
+
+
+def test_equal_eta_is_round_robin_periodic():
+    eta = relative_frequencies(6, "equal")
+    pi = greedy_schedule(eta, 2, 12)
+    period = schedule_period(pi)
+    assert period <= 3                            # n/A = 3 (Theorem 3)
+    assert (pi.sum(0) == 4).all()                 # perfectly balanced
+
+
+def test_staleness_respects_period():
+    eta = relative_frequencies(4, "equal")
+    pi = greedy_schedule(eta, 2, 20)
+    tau = schedule_staleness(pi)
+    assert tau.max() <= 2                         # everyone runs every n/A=2
+
+
+def test_distance_eta_monotone():
+    d = np.array([10.0, 50.0, 100.0, 190.0])
+    eta = relative_frequencies(4, "distance", distances=d)
+    assert abs(eta.sum() - 1) < 1e-9
+    assert (np.diff(eta) < 0).all()               # farther → smaller η
+
+
+def test_estimate_A_K_bounds():
+    fl = FLConfig(beta=0.07, staleness_bound=5)
+    eta = relative_frequencies(20, "equal")
+    a, k = estimate_A_K(fl, eta=eta, epsilon=0.1, L_F=4.0, sigma_F2=1.0,
+                        gamma_F2=1.0)
+    assert 1 <= a <= 20
+    assert k >= 1
+    # smaller epsilon → more rounds required
+    _, k2 = estimate_A_K(fl, eta=eta, epsilon=0.01, L_F=4.0, sigma_F2=1.0,
+                         gamma_F2=1.0)
+    assert k2 >= k
+
+
+@given(st.integers(2, 30), st.integers(1, 10))
+@settings(max_examples=30, deadline=None)
+def test_every_ue_eventually_scheduled(n, a):
+    a = min(a, n)
+    eta = relative_frequencies(n, "equal")
+    pi = greedy_schedule(eta, a, 4 * n)
+    assert (pi.sum(0) > 0).all()

@@ -1,0 +1,104 @@
+"""SPMD semi-synchronous step (core/semi_sync.py) semantics on one device."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ExperimentConfig, FLConfig, ModelConfig, TrainConfig
+from repro.core import semi_sync
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.utils import tree_norm, tree_sub
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ExperimentConfig(
+        model=ModelConfig(name="mnist_dnn", family="small", d_model=16,
+                          vocab_size=10, dtype="float32"),
+        fl=FLConfig(alpha=0.02, beta=0.1, staleness_bound=2),
+        train=TrainConfig(grad_clip=0.0))
+    model = build_model(cfg.model)
+    opt = make_optimizer("sgd")
+    return cfg, model, opt
+
+
+def _cohort_batches(rng, n_cohorts, b=8):
+    def one(r):
+        return {"x": jax.random.normal(r, (n_cohorts, b, 28, 28)),
+                "y": jax.random.randint(r, (n_cohorts, b), 0, 10)}
+    r1, r2, r3 = jax.random.split(rng, 3)
+    return {"inner": one(r1), "outer": one(r2), "hessian": one(r3)}
+
+
+def test_masked_aggregation_matches_manual(setup, rng):
+    cfg, model, opt = setup
+    n = 3
+    step = semi_sync.make_semi_sync_step(model, cfg, opt, n)
+    state = semi_sync.init_state(model, rng, opt, n)
+    # hand-fill buffers with known values
+    bufs = jax.tree.map(
+        lambda b: jnp.stack([jnp.full(b.shape[1:], float(i + 1), b.dtype)
+                             for i in range(n)]), state.buffers)
+    state = state._replace(buffers=bufs)
+    mask = jnp.array([1.0, 0.0, 1.0])
+    batches = _cohort_batches(rng, n)
+    new_state, metrics = jax.jit(step)(state, batches, mask, rng)
+    # Eq. (8): w ← w − β/2 · (buf_0 + buf_2) = w − 0.1/2·(1+3)
+    delta = jax.tree.map(lambda new, old: new - old, new_state.params,
+                         state.params)
+    for leaf in jax.tree.leaves(delta):
+        np.testing.assert_allclose(np.asarray(leaf), -0.1 / 2 * 4.0, atol=1e-5)
+
+
+def test_refresh_only_scheduled_cohorts(setup, rng):
+    cfg, model, opt = setup
+    n = 3
+    step = semi_sync.make_semi_sync_step(model, cfg, opt, n)
+    state = semi_sync.init_state(model, rng, opt, n)
+    mask = jnp.array([1.0, 0.0, 1.0])
+    batches = _cohort_batches(rng, n)
+    new_state, _ = jax.jit(step)(state, batches, mask, rng)
+    # cohort 1 keeps zeros; 0 and 2 refreshed to non-zero fresh grads
+    b0 = jax.tree.leaves(new_state.buffers)[0]
+    assert float(jnp.abs(b0[1]).max()) == 0.0
+    assert float(jnp.abs(b0[0]).max()) > 0.0
+    assert float(jnp.abs(b0[2]).max()) > 0.0
+    np.testing.assert_array_equal(np.asarray(new_state.staleness), [0, 1, 0])
+
+
+def test_stale_cohort_forced_refresh(setup, rng):
+    cfg, model, opt = setup
+    n = 2
+    step = jax.jit(semi_sync.make_semi_sync_step(model, cfg, opt, n))
+    state = semi_sync.init_state(model, rng, opt, n)
+    batches = _cohort_batches(rng, n)
+    mask = jnp.array([1.0, 0.0])
+    # S = 2: after 3 rounds of never being scheduled, cohort 1 must refresh
+    for _ in range(3):
+        state, _ = step(state, batches, mask, rng)
+    assert int(state.staleness[1]) == 3
+    state, _ = step(state, batches, mask, rng)
+    assert int(state.staleness[1]) == 0       # τ > S triggered the refresh
+
+
+def test_single_cohort_is_synchronous_perfedavg(setup, rng):
+    """n_cohorts=1, mask=[1] ≡ make_train_step(perfed) after one warm-up
+    round (the first semi-sync round applies the zero-initialised buffer)."""
+    cfg, model, opt = setup
+    semi = jax.jit(semi_sync.make_semi_sync_step(model, cfg, opt, 1))
+    plain = jax.jit(semi_sync.make_train_step(model, cfg, opt,
+                                              perfed_step=True))
+    s_state = semi_sync.init_state(model, rng, opt, 1)
+    p_state = semi_sync.init_train_state(model, rng, opt)
+    batches = _cohort_batches(rng, 1)
+    flat_batches = jax.tree.map(lambda x: x[0], batches)
+    mask = jnp.ones((1,))
+    # round 1: buffer zero → params unchanged, buffer filled
+    s_state, _ = semi(s_state, batches, mask, rng)
+    assert float(tree_norm(tree_sub(s_state.params, p_state.params))) < 1e-7
+    # round 2 applies exactly the gradient plain computes
+    s_state, _ = semi(s_state, batches, mask, rng)
+    p_state, _ = plain(p_state, flat_batches, rng)
+    err = float(tree_norm(tree_sub(s_state.params, p_state.params)))
+    assert err < 1e-5, err

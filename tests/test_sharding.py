@@ -1,0 +1,71 @@
+"""Logical-axis rules → PartitionSpec resolution."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+from repro.configs import get_config
+from repro.launch.mesh import make_mesh
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # single host device → (1, 1) mesh with production axis names
+    return make_mesh((1, 1), ("data", "model"))
+
+
+def test_logical_spec_basic(mesh):
+    spec = sharding.logical_spec(("batch", None, "heads"), mesh)
+    assert spec == P("data", None, "model")
+
+
+def test_logical_spec_no_double_axis_use(mesh):
+    # two dims mapping to "model": the second must resolve to None
+    spec = sharding.logical_spec(("experts", "embed", "ffn"), mesh)
+    assert spec == P("model", "data", None)
+
+
+def test_logical_spec_without_mesh():
+    spec = sharding.logical_spec(("batch", "heads"), None)
+    assert spec == P(None, None)
+
+
+def test_param_specs_cover_model(mesh):
+    cfg = get_config("yi_6b").reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = sharding.param_specs(params, mesh)
+    flat = jax.tree_util.tree_leaves_with_path(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(flat) == len(jax.tree.leaves(params))
+    # attention weights must be model-sharded on their feature dim
+    d = {sharding._path_str(p): s for p, s in flat}
+    wq = [v for k, v in d.items() if "w_q" in k][0]
+    assert "model" in jax.tree.leaves(wq) or "model" in tuple(wq)
+
+
+def test_moe_param_specs(mesh):
+    cfg = get_config("deepseek_v2_236b").reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = sharding.param_specs(params, mesh)
+    flat = {sharding._path_str(p): s for p, s in
+            jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda s: isinstance(s, P))}
+    gate = [v for k, v in flat.items() if "moe_gate" in k][0]
+    assert gate[1] == "model"        # (layers, experts→model, embed→data, ffn)
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert sharding.constrain(x, "batch", None) is x
+
+
+def test_rules_overrides():
+    rules = sharding.AxisRules().with_overrides(experts=())
+    mesh = make_mesh((1, 1), ("data", "model"))
+    spec = sharding.logical_spec(("experts", "embed", "ffn"), mesh, rules)
+    assert spec == P(None, "data", "model")

@@ -1,0 +1,78 @@
+"""Hypothesis property tests on the event-driven simulator's invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ExperimentConfig, FLConfig
+from repro.configs import get_config
+from repro.data import partition_noniid, synthetic_mnist
+from repro.fl.simulation import run_simulation
+from repro.models import build_model
+
+_DATA = synthetic_mnist(n=600, seed=21)
+_MODEL = build_model(get_config("mnist_dnn"))
+
+
+def _run(n, a, s, mode, seed, rounds=6, bandwidth="optimal"):
+    cfg = ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        fl=FLConfig(n_ues=n, participants_per_round=a, staleness_bound=s,
+                    alpha=0.03, beta=0.07, inner_batch=8, outer_batch=8,
+                    hessian_batch=8))
+    clients = partition_noniid(_DATA, n, l=4, seed=seed)
+    return run_simulation(cfg, _MODEL, clients, algorithm="perfed",
+                          mode=mode, bandwidth_policy=bandwidth,
+                          max_rounds=rounds, eval_every=100, seed=seed)
+
+
+@given(st.integers(4, 8), st.integers(1, 4), st.integers(1, 4),
+       st.integers(0, 3))
+@settings(max_examples=8, deadline=None)
+def test_invariants_semi(n, a, s, seed):
+    a = min(a, n)
+    res = _run(n, a, s, "semi", seed)
+    # Eq. (14): every realised round has exactly A participants
+    assert (res.pi.sum(1) == a).all()
+    # total arrivals = A · K
+    assert res.pi.sum() == a * res.pi.shape[0]
+    # η sums to 1 and wall clock is positive & monotone
+    assert abs(res.eta_realised.sum() - 1) < 1e-9
+    assert res.total_time > 0
+    assert (np.diff(res.times) >= -1e-12).all()
+    # wait fraction is a valid fraction
+    assert 0.0 <= res.wait_fraction < 1.0
+
+
+@given(st.integers(4, 6), st.integers(0, 2))
+@settings(max_examples=5, deadline=None)
+def test_sync_rounds_include_everyone(n, seed):
+    res = _run(n, n, 10, "sync", seed, rounds=3)
+    assert (res.pi.sum(1) == n).all()
+
+
+@given(st.integers(0, 2))
+@settings(max_examples=3, deadline=None)
+def test_async_one_per_round(seed):
+    res = _run(6, 1, 10, "async", seed, rounds=8)
+    assert (res.pi.sum(1) == 1).all()
+
+
+def test_participation_gap_bounded_when_S_large():
+    """With S ≥ n/A no in-flight work is abandoned, UEs cycle periodically
+    (Theorem 3) and the participation gap stays ≤ ~n/A + flight slack."""
+    from repro.core.scheduler import schedule_staleness
+    n, a, s = 8, 2, 10
+    res = _run(n, a, s, "semi", seed=5, rounds=20)
+    tau = schedule_staleness(res.pi)
+    part_tau = tau[res.pi == 1]
+    assert part_tau.max() <= n // a + 2      # period n/A plus flight slack
+
+
+def test_small_S_abandons_work():
+    """C1.5 phenomenon: S below the natural period forces refresh cascades —
+    realised wait/abandonment appears (the Fig.-10 'small S hurts' effect)."""
+    res_small = _run(8, 2, 1, "semi", seed=3, rounds=16)
+    res_large = _run(8, 2, 10, "semi", seed=3, rounds=16)
+    # both still satisfy the Π invariant and advance the clock
+    assert (res_small.pi.sum(1) == 2).all()
+    assert res_small.total_time >= res_large.total_time * 0.5

@@ -1,0 +1,72 @@
+"""End-to-end behaviour of the whole system (replaces the scaffold stub):
+paper pipeline = theory → scheduler/bandwidth → Alg.1 server → convergent
+personalized model, plus the launchers' public CLIs."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_full_paper_pipeline():
+    from repro.config import ExperimentConfig, FLConfig
+    from repro.configs import get_config
+    from repro.core.convergence import (SmoothnessParams, gamma_F2,
+                                        max_feasible_beta, sigma_F2,
+                                        smoothness_F)
+    from repro.core.scheduler import estimate_A_K, relative_frequencies
+    from repro.data import partition_noniid, synthetic_mnist
+    from repro.fl.simulation import run_simulation
+    from repro.models import build_model
+
+    # 1) theory → hyperparameters (Corollary 1 / Eq. 42-43)
+    p = SmoothnessParams(L=1.0, C=1.0, rho=0.5)
+    alpha = 0.03
+    l_f = smoothness_F(p, alpha)
+    fl = FLConfig(n_ues=10, alpha=alpha, staleness_bound=3,
+                  inner_batch=16, outer_batch=16, hessian_batch=16)
+    beta = min(fl.beta, max_feasible_beta(l_f, fl.staleness_bound))
+    eta = relative_frequencies(10, "equal")
+    a_star, k_star = estimate_A_K(
+        fl, eta=eta, epsilon=0.5, L_F=l_f,
+        sigma_F2=sigma_F2(p, alpha, 16, 16, 16), gamma_F2=gamma_F2(p, alpha))
+    assert 1 <= a_star <= 10 and k_star >= 1
+
+    # 2) run the full system with those hyperparameters
+    cfg = ExperimentConfig(model=get_config("mnist_dnn"),
+                           fl=FLConfig(n_ues=10, participants_per_round=a_star,
+                                       staleness_bound=3, alpha=alpha,
+                                       beta=float(beta), inner_batch=16,
+                                       outer_batch=16, hessian_batch=16))
+    model = build_model(cfg.model)
+    clients = partition_noniid(synthetic_mnist(n=2000, seed=7), 10, 4, seed=7)
+    res = run_simulation(cfg, model, clients, algorithm="perfed", mode="semi",
+                         max_rounds=20, eval_every=20, seed=7)
+    assert res.losses[-1] < res.losses[0]
+    assert (res.pi.sum(1) == a_star).all()
+
+
+@pytest.mark.slow
+def test_train_launcher_fl_mode():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--mode", "fl",
+         "--arch", "mnist_dnn", "--algo", "perfed", "--sync-mode", "semi",
+         "fl.rounds=10", "fl.n_ues=8", "fl.participants_per_round=3"],
+        capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "final:" in out.stdout
+
+
+@pytest.mark.slow
+def test_serve_launcher():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--arch", "yi_6b",
+         "--batch", "2", "--prompt-len", "16", "--gen", "4", "--personalize"],
+        capture_output=True, text=True, env=env, timeout=420)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "decode:" in out.stdout

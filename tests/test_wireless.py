@@ -1,0 +1,57 @@
+"""Wireless model — Eq. (9)–(12) properties."""
+import numpy as np
+import pytest
+
+from repro.config import WirelessConfig
+from repro.core.bandwidth import uplink_rate
+from repro.wireless.channel import EdgeNetwork
+from repro.wireless.timing import compute_time, model_bits, round_time, upload_time
+
+
+@pytest.fixture(scope="module")
+def net():
+    return EdgeNetwork.drop(WirelessConfig(), 12, seed=0)
+
+
+def test_drop_geometry(net):
+    assert (net.distances <= 200.0).all() and (net.distances >= 5.0).all()
+    assert net.cpu_freq.max() / net.cpu_freq.min() <= 4.0 * 1.001
+
+
+def test_rate_decreases_with_distance(net):
+    h = 40.0
+    r_near = uplink_rate(5e4, net.channel(int(np.argmin(net.distances)), h))
+    r_far = uplink_rate(5e4, net.channel(int(np.argmax(net.distances)), h))
+    assert r_near > r_far
+
+
+def test_rayleigh_fading_statistics(net):
+    h = np.concatenate([net.sample_fading() for _ in range(200)])
+    # Rayleigh(σ=40): mean = σ√(π/2) ≈ 50.13
+    assert abs(h.mean() - 40 * np.sqrt(np.pi / 2)) < 2.0
+    assert (h > 0).all()
+
+
+def test_compute_time_eq11():
+    assert compute_time(2e5, 48, 1e9) == pytest.approx(2e5 * 48 / 1e9)
+
+
+def test_upload_time_decreasing_in_bandwidth(net):
+    ch = net.channel(0, 40.0)
+    assert upload_time(1e6, 2e5, ch) < upload_time(1e6, 1e5, ch)
+
+
+def test_round_time_is_max():
+    assert round_time(np.array([0.3, 1.2, 0.7])) == pytest.approx(1.2)
+
+
+def test_model_bits():
+    import jax.numpy as jnp
+    params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((5,))}
+    assert model_bits(params) == 105 * 32
+
+
+def test_uniform_distance_mode():
+    net_u = EdgeNetwork.drop(WirelessConfig(), 6, seed=1,
+                             uniform_distance=True)
+    assert np.allclose(net_u.distances, net_u.distances[0])
