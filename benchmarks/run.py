@@ -22,6 +22,7 @@ SUITES = [
     "bandwidth",         # Thm. 2/4 — allocation policies
     "fo_ablation",       # exact Eq.-7 HVP vs first-order variant
     "kernels",           # Pallas kernels vs oracles
+    "engine_throughput", # batched vs sequential simulation engine
     "roofline",          # §Roofline — from dry-run artifacts
 ]
 

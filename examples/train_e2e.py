@@ -46,24 +46,36 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--server-opt", default="sgd",
+                    choices=["sgd", "momentum", "adam"])
+    ap.add_argument("--fused-agg", action="store_true",
+                    help="disable grad clipping so the round update takes "
+                         "the fused Eq.-(8) stale_aggregate path (β-SGD)")
     args = ap.parse_args()
+    if args.fused_agg and args.server_opt != "sgd":
+        ap.error("--fused-agg requires --server-opt sgd (the fused Eq.-8 "
+                 "path is the plain β-SGD update)")
 
     mcfg = model_cfg(args.model_scale)
     cfg = ExperimentConfig(
         model=mcfg,
         fl=FLConfig(alpha=0.02, beta=0.5, staleness_bound=args.staleness,
                     algorithm="perfed"),
-        train=TrainConfig(grad_clip=1.0))
+        train=TrainConfig(grad_clip=0.0 if args.fused_agg else 1.0))
     model = build_model(mcfg)
-    opt = make_optimizer("sgd")
+    opt = make_optimizer(args.server_opt)
     n = args.cohorts
 
     step_fn = jax.jit(semi_sync.make_semi_sync_step(model, cfg, opt, n))
     rng = jax.random.PRNGKey(0)
     state = semi_sync.init_state(model, rng, opt, n)
     nparams = sum(int(x.size) for x in jax.tree.leaves(state.params))
+    agg_path = ("fused stale_aggregate (Eq. 8)"
+                if semi_sync.uses_fused_eq8(opt, cfg)
+                else f"masked mean + {opt.name}")
     print(f"model {mcfg.name}: {nparams/1e6:.1f}M params, "
-          f"{n} cohorts, A={args.participants}, S={args.staleness}")
+          f"{n} cohorts, A={args.participants}, S={args.staleness}, "
+          f"aggregation: {agg_path}")
 
     # per-cohort non-iid corpora (different synthetic seeds = different
     # "client populations"); Alg.-2 schedule over the cohorts

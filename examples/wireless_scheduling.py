@@ -11,8 +11,8 @@ from repro.core.bandwidth import (equal_finish_allocation, uplink_rate,
                                   weighted_equal_rate_allocation)
 from repro.core.convergence import (SmoothnessParams, gamma_F2, sigma_F2,
                                     smoothness_F)
-from repro.core.scheduler import (estimate_A_K, greedy_schedule,
-                                  relative_frequencies, schedule_period)
+from repro.core.scheduler import (estimate_A_K, get_policy, greedy_schedule,
+                                  schedule_period)
 from repro.wireless.channel import EdgeNetwork
 
 LN2 = np.log(2)
@@ -23,8 +23,9 @@ net = EdgeNetwork.drop(wcfg, 8, seed=1)
 print("distances [m]:", net.distances.round(1))
 print("CPU freq [GHz]:", (net.cpu_freq / 1e9).round(2))
 
-# --- 2) distance-derived relative participation frequencies η ----------------
-eta = relative_frequencies(8, "rates", rates=net.mean_rates())
+# --- 2) rate-derived relative participation frequencies η (SchedulingPolicy) -
+policy = get_policy("rates")
+eta = policy.frequencies(8, net)
 print("\nη (rate-derived):", eta.round(3))
 
 # --- 3) theory → A*, K* (Eq. 42/43) ------------------------------------------
@@ -36,8 +37,8 @@ a_star, k_star = estimate_A_K(fl, eta=eta, epsilon=0.8, L_F=l_f,
                               gamma_F2=gamma_F2(p, fl.alpha))
 print(f"A* = {a_star}, K* = {k_star}")
 
-# --- 4) Algorithm 2 greedy schedule ------------------------------------------
-pi = greedy_schedule(eta, a_star, 12)
+# --- 4) Algorithm 2 greedy schedule (the policy's planner) -------------------
+pi = policy.plan(eta, a_star, 12)
 print(f"\nΠ (first 12 rounds, period={schedule_period(pi)}):")
 print(pi)
 

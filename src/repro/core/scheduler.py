@@ -4,10 +4,16 @@
 * ``estimate_A_K``        — Eq. (42)/(43): A*, K* from the convergence bound.
 * ``greedy_schedule``     — Algorithm 2: greedy construction of the periodic
                             participation matrix Π with Σ_i π_k^i = A (Eq. 14).
+* ``SchedulingPolicy``    — small protocol bundling "how η is derived" with
+                            "how Π is planned", so equal/rates/distance
+                            policies compose with sync/semi/async server
+                            modes instead of living as if-chains in the
+                            simulator and benchmarks (``get_policy``).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Optional, Protocol, Tuple, runtime_checkable
 
 import numpy as np
 
@@ -104,6 +110,93 @@ def schedule_staleness(pi: np.ndarray) -> np.ndarray:
             tau[k, i] = k - last[i] - 1 if last[i] >= 0 else k
         last[pi[k] == 1] = k
     return tau
+
+
+# ---------------------------------------------------------------------------
+# Scheduling policies — composable with sync / semi / async server modes
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """How participation targets are derived and planned.
+
+    ``frequencies``  — the η vector (Eq. 15) for a concrete network drop.
+    ``plan``         — a Π matrix hitting those targets (Alg. 2 by default).
+    ``uniform_drop`` — whether the UE drop should be distance-uniform (the
+                       paper's equal-η ablation removes geometry entirely).
+    """
+
+    uniform_drop: bool
+
+    def frequencies(self, n: int, net=None) -> np.ndarray: ...
+
+    def plan(self, eta: np.ndarray, A: int, K: int) -> np.ndarray: ...
+
+
+@dataclass(frozen=True)
+class _GreedyPlanMixin:
+    """Default Π planner: the paper's Algorithm 2 greedy construction."""
+
+    def plan(self, eta: np.ndarray, A: int, K: int) -> np.ndarray:
+        return greedy_schedule(eta, A, K)
+
+
+@dataclass(frozen=True)
+class EqualPolicy(_GreedyPlanMixin):
+    """η_i = 1/n; pairs with a distance-uniform drop (Sec. VI-A equal-η)."""
+
+    uniform_drop: bool = True
+
+    def frequencies(self, n: int, net=None) -> np.ndarray:
+        return relative_frequencies(n, "equal")
+
+
+@dataclass(frozen=True)
+class RatesPolicy(_GreedyPlanMixin):
+    """η_i ∝ mean achievable uplink rate of the drop (Sec. VI-A-4: farther,
+    slower UEs naturally participate less)."""
+
+    uniform_drop: bool = False
+
+    def frequencies(self, n: int, net=None) -> np.ndarray:
+        if net is None:
+            return relative_frequencies(n, "equal")
+        return relative_frequencies(n, "rates", rates=net.mean_rates())
+
+
+@dataclass(frozen=True)
+class DistancePolicy(_GreedyPlanMixin):
+    """η_i from the closed-form distance proxy (no channel model needed)."""
+
+    uniform_drop: bool = False
+    kappa: float = 3.8
+
+    def frequencies(self, n: int, net=None) -> np.ndarray:
+        if net is None:
+            return relative_frequencies(n, "equal")
+        return relative_frequencies(n, "distance", distances=net.distances,
+                                    kappa=self.kappa)
+
+
+# ``distance`` maps to RatesPolicy on purpose: the simulator's historical
+# eta_mode="distance" derives η from the mean rates of a distance-dependent
+# drop (that IS the paper's Sec. VI-A-4 recipe); the pure closed-form proxy
+# stays available as "distance-proxy".
+_POLICIES = {
+    "equal": EqualPolicy,
+    "rates": RatesPolicy,
+    "distance": RatesPolicy,
+    "distance-proxy": DistancePolicy,
+}
+
+
+def get_policy(name: str) -> SchedulingPolicy:
+    """Resolve an ``fl.eta_mode`` string to a SchedulingPolicy instance."""
+    try:
+        return _POLICIES[name]()
+    except KeyError:
+        raise ValueError(f"unknown scheduling policy {name!r}; "
+                         f"known: {sorted(_POLICIES)}") from None
 
 
 def schedule_period(pi: np.ndarray) -> int:

@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from repro import sharding
 from repro.config import ExperimentConfig
 from repro.core import perfed
+from repro.kernels.stale_aggregate import (masked_aggregate_tree,
+                                           stale_aggregate_tree)
 from repro.optim import Optimizer, clip_by_global_norm
 from repro.utils import tree_axpy, tree_scale, tree_zeros_like
 
@@ -81,6 +83,12 @@ def _cohort_grads(model, cfg: ExperimentConfig, params, cohort_batches,
     return jax.vmap(one, in_axes=(0, 0))(cohort_batches, rngs)
 
 
+def uses_fused_eq8(optimizer: Optimizer, cfg: ExperimentConfig) -> bool:
+    """Pure Eq. (8) — β-SGD, no clipping — is exactly the fused masked
+    stale-aggregation op; anything fancier needs the masked mean first."""
+    return optimizer.name == "sgd" and not cfg.train.grad_clip
+
+
 def make_semi_sync_step(model, cfg: ExperimentConfig, optimizer: Optimizer,
                         n_cohorts: int) -> Callable:
     """Build the jittable semi-synchronous round function.
@@ -90,20 +98,26 @@ def make_semi_sync_step(model, cfg: ExperimentConfig, optimizer: Optimizer,
     """
     fl = cfg.fl
 
+    fused_eq8 = uses_fused_eq8(optimizer, cfg)
+
     def step_fn(state: SemiSyncState, cohort_batches, mask: jax.Array, rng
                 ) -> Tuple[SemiSyncState, Dict[str, jax.Array]]:
-        a_k = jnp.maximum(mask.sum(), 1.0)
-
         # -- 1) server update from arriving (possibly stale) gradients -------
-        agg = jax.tree.map(
-            lambda b: jnp.einsum("c...,c->...", b.astype(jnp.float32), mask)
-            / a_k, state.buffers)
-        if cfg.train.grad_clip:
-            agg, gnorm = clip_by_global_norm(agg, cfg.train.grad_clip)
-        else:
+        # via the unified aggregation API (same code path as the simulation
+        # server and the engine's fused round / Pallas kernel)
+        if fused_eq8:
             gnorm = jnp.zeros(())
-        new_params, new_opt = optimizer.update(agg, state.opt_state,
-                                               state.params, fl.beta)
+            new_params = stale_aggregate_tree(state.params, state.buffers,
+                                              mask, beta=fl.beta)
+            new_opt = state.opt_state
+        else:
+            agg = masked_aggregate_tree(state.buffers, mask)
+            if cfg.train.grad_clip:
+                agg, gnorm = clip_by_global_norm(agg, cfg.train.grad_clip)
+            else:
+                gnorm = jnp.zeros(())
+            new_params, new_opt = optimizer.update(agg, state.opt_state,
+                                                   state.params, fl.beta)
 
         # -- 2) refresh buffers: scheduled cohorts (+ over-stale ones) -------
         refresh = (mask > 0) | (state.staleness > fl.staleness_bound)

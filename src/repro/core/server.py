@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils import tree_add, tree_axpy, tree_scale, tree_zeros_like
+from repro.kernels.stale_aggregate import stale_aggregate_tree
 
 
 @dataclass
@@ -52,6 +52,15 @@ class SemiSyncServer:
         self.history_staleness: List[np.ndarray] = []
 
     # ------------------------------------------------------------------
+    def arrivals_until_round(self) -> int:
+        """How many more uploads close the current round (A − pending).
+
+        Until that many arrive, no global update, distribution, or
+        cancellation can happen — which is exactly what lets the simulator
+        drain that many events and compute their payloads as one batch.
+        """
+        return self.a - len(self._pending)
+
     def staleness(self, ue: int) -> int:
         """τ_k^i — rounds since UE i last received the global model."""
         return self.round - int(self.ue_version[ue])
@@ -68,31 +77,54 @@ class SemiSyncServer:
         arrived = self._pending
         self._pending = []
         # --- Eq. (8): w_{k+1} = w_k − β/A Σ_{i∈A_k} ∇̃F_i(w_{k−τ_k^i}),
-        # optionally λ^τ staleness-discounted (normalised weighted mean) ----
+        # optionally λ^τ staleness-discounted — the discount folds into the
+        # aggregation mask, so every mode shares the one fused kernel path --
+        mask = self._weights([tau for _, _, tau in arrived])
+        self.params = stale_aggregate_tree(
+            self.params, [g for _, g, _ in arrived],
+            jnp.asarray(mask, jnp.float32), beta=self.cfg.beta)
+        return self._advance_round([i for i, _, _tau in arrived])
+
+    def on_round_batch(self, ues: Sequence[int],
+                       aggregate_fn: Callable) -> Dict[str, Any]:
+        """Fused fast path: a full round of uploads arrives at once.
+
+        The simulator drains exactly the A arrivals that close the round and
+        delegates the Eq. (8) math to ``aggregate_fn(params, weights) →
+        new_params`` (the engine's single fused dispatch: payload
+        computation + masked stale aggregation).  Protocol state — rounds,
+        Π, staleness, the distribution rule — stays here, identical to the
+        per-arrival path.
+        """
+        if self._pending:
+            raise RuntimeError("pending uploads exist; use on_arrival")
+        if len(ues) != self.a:
+            raise ValueError(f"round batch needs exactly A={self.a} uploads, "
+                             f"got {len(ues)}")
+        weights = self._weights([self.staleness(u) for u in ues])
+        self.params = aggregate_fn(self.params, weights)
+        return self._advance_round(list(ues))
+
+    # ------------------------------------------------------------------
+    def _weights(self, taus: Sequence[int]) -> np.ndarray:
+        """Aggregation mask: 1s, or normalised λ^τ staleness discounts."""
         lam = self.cfg.staleness_discount
         if lam < 1.0:
-            wts = [lam ** tau for _, _, tau in arrived]
-            wsum = max(sum(wts), 1e-12)
-            agg = None
-            for (_, g, _), wt in zip(arrived, wts):
-                scaled = tree_scale(g, wt * self.a / wsum)
-                agg = scaled if agg is None else tree_add(agg, scaled)
-        else:
-            agg = None
-            for _, g, _ in arrived:
-                agg = g if agg is None else tree_add(agg, g)
-        self.params = tree_axpy(-self.cfg.beta / self.a, agg, self.params)
+            wts = np.array([lam ** tau for tau in taus])
+            return wts * (self.a / max(wts.sum(), 1e-12))
+        return np.ones(len(taus))
 
+    def _advance_round(self, arrived_ues: List[int]) -> Dict[str, Any]:
         pi_row = np.zeros(self.cfg.n_ues, dtype=np.int64)
         stale_row = np.array([self.staleness(i) for i in range(self.cfg.n_ues)])
-        for i, _, _tau in arrived:
+        for i in arrived_ues:
             pi_row[i] = 1
         self.history_pi.append(pi_row)
         self.history_staleness.append(stale_row)
 
         self.round += 1
         # --- distribution rule (Alg. 1 line 13-15) -------------------------
-        distribute = sorted({i for i, _, _tau in arrived}
+        distribute = sorted(set(arrived_ues)
                             | {i for i in range(self.cfg.n_ues)
                                if self.staleness(i) > self.cfg.staleness_bound})
         for i in distribute:

@@ -27,10 +27,27 @@ class ClientDataset:
         idx = self.rng.integers(0, n, size=min(batch_size, n))
         return {k: v[idx] for k, v in self.data.items()}
 
+    def triplet_sizes(self, b_in: int, b_o: int, b_h: int
+                      ) -> "tuple[int, int, int]":
+        """Actual (inner, outer, hessian) batch sizes ``sample_triplet``
+        will return — the truncation rule lives HERE, next to the sampler,
+        so shape-compatibility checks can't drift from it."""
+        n = len(self)
+        return (min(b_in, n), min(b_o, n), min(b_h, n))
+
     def sample_triplet(self, b_in: int, b_o: int, b_h: int) -> Dict[str, Dict]:
-        """Three *independent* batches (D_in, D_o, D_h of Eq. 7)."""
-        return {"inner": self.sample(b_in), "outer": self.sample(b_o),
-                "hessian": self.sample(b_h)}
+        """Three *independent* batches (D_in, D_o, D_h of Eq. 7).
+
+        Drawn as ONE index vector + one gather per field, then sliced into
+        the three views — the simulator calls this once per arrival, so it
+        sits on the event-loop hot path.
+        """
+        s_in, s_o, s_h = self.triplet_sizes(b_in, b_o, b_h)
+        idx = self.rng.integers(0, len(self), size=s_in + s_o + s_h)
+        full = {k: v[idx] for k, v in self.data.items()}
+        return {"inner": {k: v[:s_in] for k, v in full.items()},
+                "outer": {k: v[s_in:s_in + s_o] for k, v in full.items()},
+                "hessian": {k: v[s_in + s_o:] for k, v in full.items()}}
 
 
 def partition_noniid(data: Dict[str, np.ndarray], n_clients: int, l: int,

@@ -1,3 +1,4 @@
 from repro.fl.client import make_payload_fn, personalized_eval, global_eval
 from repro.fl.algorithms import ALGORITHMS, algorithm_name
+from repro.fl.engine import SimulationEngine, bucket_size
 from repro.fl.simulation import run_simulation, SimResult

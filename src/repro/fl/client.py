@@ -58,11 +58,14 @@ def _local_sgd(model, params, batches, lr: float, steps: int, rng,
     return p_final
 
 
-def make_payload_fn(model, fl: FLConfig, algorithm: str) -> PayloadFn:
-    """Jittable payload computation for one client.
+def make_payload_fn(model, fl: FLConfig, algorithm: str, *,
+                    jit: bool = True) -> PayloadFn:
+    """Payload computation for one client.
 
     ``alpha`` is a traced argument so heterogeneous per-UE learning rates
     α_i (the paper's §II-B generalisation) share one compiled function.
+    ``jit=False`` returns the raw traceable function — the batched engine
+    wraps it in ``vmap`` itself and jits per bucket size.
     """
 
     if algorithm == "perfed":
@@ -95,7 +98,7 @@ def make_payload_fn(model, fl: FLConfig, algorithm: str) -> PayloadFn:
     else:
         raise ValueError(f"unknown algorithm {algorithm!r}")
 
-    return jax.jit(payload)
+    return jax.jit(payload) if jit else payload
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,333 @@
+"""SimulationEngine — batched device math under the event-driven simulator.
+
+The simulator (``fl/simulation.py``) is a thin host-side driver: it pops
+arrival events, asks this engine for the corresponding client payloads, and
+feeds them to the Algorithm-1 server.  The engine owns every device
+dispatch:
+
+* **sequential** mode — one jitted payload call per arrival (the original
+  simulator behaviour; kept as the correctness/throughput reference).
+* **batched** mode — a whole round of arrivals fuses into one device
+  dispatch per *model-version group* (``round_update``): per-arrival RNG
+  derivation, the ``vmap``-ed payload computation, and the Eq. (8) masked
+  stale aggregation (``kernels/stale_aggregate``) all run inside jitted
+  functions.  Lanes sharing a version are grouped so the model weights are
+  read once per group (the payload math is memory-bound on weights); when
+  versions are mostly distinct, a single all-lanes dispatch carries each
+  lane's own flat version instead.  Arrival counts are padded up to
+  power-of-2 *bucket* sizes (1, 2, 4, ... ``max_bucket``) with zero
+  aggregation weight on padded lanes, so the jit cache holds one entry per
+  (bucket, shape-signature) instead of recompiling per batch size — N
+  concurrent UE payloads cost one-or-few dispatches instead of N.
+
+Model versions move through the all-lanes path as flat f32 vectors (a
+cached ``TreeFlattener`` per structure + an id-keyed cache of already-
+flattened versions), so a round touches the host only to stack its inputs.
+
+Numerics are identical to the sequential path up to XLA's batching of the
+same ops (the equivalence test in ``tests/test_engine.py`` pins this), and
+per-arrival RNG keys are derived from fold_in(key, event id), so batched
+and sequential runs of the same seed produce the same trajectories.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import FLConfig
+from repro.fl.client import make_payload_fn, personalized_eval
+from repro.kernels.stale_aggregate import stale_aggregate_tree
+from repro.utils.tree import TreeFlattener
+
+__all__ = ["SimulationEngine", "bucket_size"]
+
+
+def bucket_size(m: int, max_bucket: int = 256) -> int:
+    """Smallest power of two ≥ m, capped at ``max_bucket``."""
+    if m <= 0:
+        raise ValueError("empty batch")
+    b = 1
+    while b < m:
+        b <<= 1
+    return min(b, max_bucket)
+
+
+def _shape_signature(batches: Any) -> Tuple:
+    """Hashable (path-ordered) leaf shape+dtype signature of a batch tree."""
+    leaves, treedef = jax.tree_util.tree_flatten(batches)
+    # read .dtype directly — np.asarray would pull device arrays to host
+    return (treedef, tuple((x.shape, np.dtype(x.dtype).str)
+                           for x in leaves))
+
+
+def _stack_trees(trees: Sequence[Any]):
+    def stack(*xs):
+        if all(isinstance(x, np.ndarray) for x in xs):
+            return jnp.asarray(np.stack(xs))       # one host→device transfer
+        return jnp.stack([jnp.asarray(x) for x in xs])
+    return jax.tree.map(stack, *trees)
+
+
+class SimulationEngine:
+    """Vectorized payload computation for a (model, FLConfig, algorithm)."""
+
+    def __init__(self, model, fl: FLConfig, algorithm: str, *,
+                 payload_mode: str = "batched", max_bucket: int = 256,
+                 agg_backend: str = "auto"):
+        if payload_mode not in ("batched", "sequential"):
+            raise ValueError(f"unknown payload_mode {payload_mode!r}")
+        self.model = model
+        self.fl = fl
+        self.algorithm = algorithm
+        self.payload_mode = payload_mode
+        self.max_bucket = max_bucket
+        self.agg_backend = agg_backend
+        self._raw = make_payload_fn(model, fl, algorithm, jit=False)
+        self._single = jax.jit(self._raw)
+        # one jitted vmapped callable; jit's cache keys on input shapes, so
+        # it holds exactly one entry per (bucket size, batch signature)
+        self._batched = jax.jit(jax.vmap(self._raw, in_axes=(0, 0, 0, 0)))
+        self._round_fns: Dict[TreeFlattener, Any] = {}
+        self._group_fn = None
+        self._combine_fn = None
+        # id-keyed cache of flattened model versions; holding the tree ref
+        # keeps ids stable for the cache's lifetime
+        self._flat_versions: Dict[int, Tuple[Any, jax.Array]] = {}
+        self._eval_fn = None
+        self.dispatches = 0            # device calls issued (for benchmarks)
+        self.payloads_computed = 0
+
+    # ------------------------------------------------------------------
+    # evaluation (jitted once per engine, reused across simulations)
+    # ------------------------------------------------------------------
+    def eval_one(self, params, batches, rng):
+        """(personalized loss, global loss, accuracy) for one client."""
+        if self._eval_fn is None:
+            model, fl = self.model, self.fl
+
+            def _eval(params, batches, r):
+                ploss, paux = personalized_eval(model, fl, params, batches, r)
+                gout = model.loss(params, batches["outer"], r)
+                gloss, _ = gout if isinstance(gout, tuple) else (gout, {})
+                acc = (paux.get("acc", jnp.nan)
+                       if isinstance(paux, dict) else jnp.nan)
+                return ploss, gloss, acc
+
+            self._eval_fn = jax.jit(_eval)
+        return self._eval_fn(params, batches, rng)
+
+    # ------------------------------------------------------------------
+    # per-arrival payloads (sequential mode / partial batches / tests)
+    # ------------------------------------------------------------------
+    def compute_payloads(self, params_list: Sequence[Any],
+                         batches_list: Sequence[Any],
+                         rngs: Sequence[jax.Array],
+                         alphas: Sequence[float]) -> List[Any]:
+        """Payload pytree per arrival; inputs are parallel per-arrival lists.
+
+        ``params_list[i]`` is the model version arrival ``i`` computed
+        against (staleness ⇒ entries may differ), ``rngs[i]`` its private
+        key, ``alphas[i]`` its inner learning rate α_i.
+        """
+        m = len(params_list)
+        assert m == len(batches_list) == len(rngs) == len(alphas)
+        if m == 0:
+            return []
+        if self.payload_mode == "sequential":
+            out = [self._single(p, b, r, float(a))
+                   for p, b, r, a in zip(params_list, batches_list, rngs,
+                                         alphas)]
+            self.dispatches += m
+            self.payloads_computed += m
+            return out
+
+        # group by batch-shape signature (stragglers with short shards get
+        # their own bucket; the common case is a single group)
+        groups: Dict[Tuple, List[int]] = {}
+        for i, b in enumerate(batches_list):
+            groups.setdefault(_shape_signature(b), []).append(i)
+
+        results: List[Any] = [None] * m
+        for idx in groups.values():
+            for lo in range(0, len(idx), self.max_bucket):
+                self._run_bucket(idx[lo:lo + self.max_bucket], params_list,
+                                 batches_list, rngs, alphas, results)
+        return results
+
+    def _run_bucket(self, idx: List[int], params_list, batches_list, rngs,
+                    alphas, results: List[Any]) -> None:
+        k = len(idx)
+        bucket = bucket_size(k, self.max_bucket)
+        # pad by repeating the first arrival — padded lanes are discarded
+        pad = idx + [idx[0]] * (bucket - k)
+        params_b = _stack_trees([params_list[i] for i in pad])
+        batches_b = _stack_trees([batches_list[i] for i in pad])
+        rngs_b = jnp.stack([rngs[i] for i in pad])
+        alphas_b = jnp.asarray([float(alphas[i]) for i in pad],
+                               jnp.float32)
+        out = self._batched(params_b, batches_b, rngs_b, alphas_b)
+        self.dispatches += 1
+        self.payloads_computed += k
+        for lane, i in enumerate(idx):
+            results[i] = jax.tree.map(lambda x, lane=lane: x[lane], out)
+
+    # ------------------------------------------------------------------
+    # fused round update (batched mode fast path)
+    # ------------------------------------------------------------------
+    # at most ~staleness-bound distinct versions are live at once; a small
+    # multiple of the bucket leaves headroom without pinning dead models
+    _FLAT_CACHE_LIMIT = 64
+
+    def _cache_flat(self, tree, flat: jax.Array) -> None:
+        while len(self._flat_versions) >= self._FLAT_CACHE_LIMIT:
+            # evict oldest first (dict preserves insertion order) — each
+            # entry pins a full model copy, so wholesale retention would
+            # hold every historical version of a long sweep in memory
+            self._flat_versions.pop(next(iter(self._flat_versions)))
+        self._flat_versions[id(tree)] = (tree, flat)
+
+    def _flat_of(self, tree, flattener: TreeFlattener) -> jax.Array:
+        ent = self._flat_versions.get(id(tree))
+        if ent is not None:
+            return ent[1]
+        flat = flattener.flatten(tree)
+        self._cache_flat(tree, flat)
+        return flat
+
+    def _get_round_fn(self, flattener: TreeFlattener):
+        """All-lanes path: every lane carries its own flat model version."""
+        fn = self._round_fns.get(flattener)
+        if fn is None:
+            raw, backend = self._raw, self.agg_backend
+
+            def round_fn(p_tree, version_tuple, batches, seqs, alphas,
+                         weights, beta, key):
+                # stacking happens inside the trace: the bucket-length tuple
+                # of flat model versions costs zero extra dispatches
+                versions = jnp.stack(version_tuple)
+
+                def one(v, b, s, a):
+                    params = flattener.unflatten(v)
+                    r = jax.random.fold_in(key, s)
+                    return raw(params, b, r, a)
+
+                payloads = jax.vmap(one)(versions, batches, seqs, alphas)
+                new_tree = stale_aggregate_tree(p_tree, payloads, weights,
+                                                beta=beta, backend=backend)
+                return new_tree, flattener.flatten(new_tree)
+
+            fn = self._round_fns[flattener] = jax.jit(round_fn)
+        return fn
+
+    def _get_group_fn(self):
+        """Shared-version path: params broadcast (in_axes=None), the model
+        weights are read ONCE per version group instead of once per lane —
+        the payload math is memory-bound on weights, so this is the big
+        lever at scale.  Returns the group's weighted payload sum."""
+        if self._group_fn is None:
+            raw = self._raw
+
+            def gfn(params, batches, seqs, alphas, weights, key):
+                def one(b, s, a):
+                    r = jax.random.fold_in(key, s)
+                    return raw(params, b, r, a)
+
+                pay = jax.vmap(one, in_axes=(0, 0, 0))(batches, seqs, alphas)
+                return jax.tree.map(
+                    lambda bl: jnp.tensordot(weights,
+                                             bl.astype(jnp.float32), axes=1),
+                    pay)
+
+            self._group_fn = jax.jit(gfn)
+        return self._group_fn
+
+    def _get_combine_fn(self):
+        """w ← w − scale·Σ_g partial_g — jit recompiles per group count."""
+        if self._combine_fn is None:
+
+            def cfn(params, scale, *partials):
+                tot = jax.tree.map(lambda *xs: sum(xs[1:], xs[0]), *partials)
+                return jax.tree.map(
+                    lambda p, t: (p.astype(jnp.float32) - scale * t)
+                    .astype(jnp.asarray(p).dtype), params, tot)
+
+            self._combine_fn = jax.jit(cfn)
+        return self._combine_fn
+
+    def _round_grouped(self, server_params, groups, gparams, batches_list,
+                       seqs, alphas, weights, beta, base_key):
+        gfn = self._get_group_fn()
+        partials = []
+        for g, group_lanes in enumerate(groups):
+            bucket = bucket_size(len(group_lanes), self.max_bucket)
+            lanes = group_lanes + [group_lanes[0]] * (bucket -
+                                                      len(group_lanes))
+            batches = _stack_trees([batches_list[i] for i in lanes])
+            seqs_b = jnp.asarray([int(seqs[i]) for i in lanes], jnp.int32)
+            alphas_b = jnp.asarray([float(alphas[i]) for i in lanes],
+                                   jnp.float32)
+            w = np.zeros(bucket, np.float32)
+            w[:len(group_lanes)] = [float(weights[i]) for i in group_lanes]
+            partials.append(gfn(gparams[g], batches, seqs_b, alphas_b,
+                                jnp.asarray(w), base_key))
+            self.dispatches += 1
+        a_tot = max(float(np.asarray(weights, np.float32).sum()), 1.0)
+        self.dispatches += 1                       # the combine call below
+        return self._get_combine_fn()(
+            server_params, jnp.float32(beta / a_tot), *partials)
+
+    def round_update(self, server_params, params_list: Sequence[Any],
+                     batches_list: Sequence[Any], seqs: Sequence[int],
+                     alphas: Sequence[float], weights: np.ndarray, *,
+                     beta: float, base_key: jax.Array):
+        """Fused round: payloads of a full round + Eq. (8) update, in one
+        device dispatch per model-version group (one total when versions
+        are mostly distinct).
+
+        ``weights`` are the server's aggregation weights (1s, or λ^τ
+        staleness discounts); padded lanes get weight 0 so they never touch
+        the update.  Returns the new global params pytree.
+        """
+        m = len(params_list)
+        if m > self.max_bucket:
+            raise ValueError(f"round of {m} arrivals exceeds max_bucket="
+                             f"{self.max_bucket}")
+        # group lanes by the model version they computed against
+        index: Dict[int, int] = {}
+        groups: List[List[int]] = []
+        gparams: List[Any] = []
+        for i, t in enumerate(params_list):
+            g = index.get(id(t))
+            if g is None:
+                g = index[id(t)] = len(groups)
+                groups.append([])
+                gparams.append(t)
+            groups[g].append(i)
+
+        self.payloads_computed += m
+        if len(groups) <= max(1, m // 2):
+            # enough version sharing to win from broadcasting the weights
+            return self._round_grouped(server_params, groups, gparams,
+                                       batches_list, seqs, alphas, weights,
+                                       beta, base_key)
+
+        flattener = TreeFlattener.for_tree(server_params)
+        bucket = bucket_size(m, self.max_bucket)
+        lanes = list(range(m)) + [0] * (bucket - m)
+        versions = tuple(self._flat_of(params_list[i], flattener)
+                         for i in lanes)
+        batches = _stack_trees([batches_list[i] for i in lanes])
+        seqs_b = jnp.asarray([int(seqs[i]) for i in lanes], jnp.int32)
+        alphas_b = jnp.asarray([float(alphas[i]) for i in lanes],
+                               jnp.float32)
+        w = np.zeros(bucket, np.float32)
+        w[:m] = np.asarray(weights, np.float32)
+        new_params, new_flat = self._get_round_fn(flattener)(
+            server_params, versions, batches, seqs_b, alphas_b,
+            jnp.asarray(w), float(beta), base_key)
+        self.dispatches += 1
+        self._cache_flat(new_params, new_flat)
+        return new_params

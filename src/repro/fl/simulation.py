@@ -4,32 +4,45 @@ Combines all the pieces:
 
   wireless.EdgeNetwork   — geometry, Rayleigh fading, heterogeneous CPUs
   core.bandwidth         — Theorem-2/4 allocations (or equal-split baseline)
-  core.scheduler         — η targets (equal / distance-derived)
+  core.scheduler         — SchedulingPolicy (equal / rates-derived η)
   core.server            — Algorithm 1 round protocol (sync / semi / async)
+  fl.engine              — batched (vmap-bucketed) payload computation
   fl.client              — payload math (fedavg / fedprox / perfed)
 
 The event loop is a priority queue over UE upload-finish times.  Each UE
 holds the last model version it received; payloads are computed against that
 version (⇒ real gradient staleness, exactly as in the paper).  Wall-clock
 time uses Eq. (10)–(12) with fading resampled per local iteration.
+
+This module is a *thin driver*: it drains all arrivals up to the next round
+boundary (the server needs ``A − pending`` more uploads before anything can
+change — no redistribution, hence no cancellation, can occur before then, so
+those payloads are all computable NOW) and hands them to the
+``SimulationEngine`` as one batch.  All device math lives in the engine; the
+loop only moves simulated time, RNG keys, and bookkeeping.
+
+RNG discipline: the seed key is split once into (init, payload, eval)
+streams; each arrival folds its unique event id into the payload stream and
+each eval folds the round index into the eval stream, so every consumer gets
+an independent key and batched vs sequential runs of the same seed see the
+same randomness.
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
-import time as pytime
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, List, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ExperimentConfig
-from repro.core.bandwidth import weighted_equal_rate_allocation, uplink_rate
-from repro.core.scheduler import relative_frequencies
+from repro.core.bandwidth import weighted_equal_rate_allocation
+from repro.core.scheduler import get_policy
 from repro.core.server import SemiSyncServer, ServerConfig
 from repro.data.partition import ClientDataset
-from repro.fl.client import make_payload_fn, personalized_eval
+from repro.fl.engine import SimulationEngine
 from repro.wireless.channel import EdgeNetwork
 from repro.wireless.timing import compute_time, upload_time, model_bits
 
@@ -47,28 +60,32 @@ class SimResult:
     eta_target: np.ndarray
     eta_realised: np.ndarray
     wait_fraction: float         # mean fraction of time UEs spent idle
+    payload_dispatches: int = 0  # device dispatches issued by the engine
+    payloads_computed: int = 0   # payloads those dispatches produced
 
 
 def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
                    *, algorithm: str = "perfed", mode: str = "semi",
                    bandwidth_policy: str = "optimal",
                    max_rounds: Optional[int] = None,
-                   eval_every: int = 5, eval_clients: int = 8,
+                   eval_every: int = 5, eval_clients: int = 8,  # 0 = no eval
                    seed: int = 0, name: Optional[str] = None,
-                   verbose: bool = False) -> SimResult:
+                   verbose: bool = False,
+                   payload_mode: Optional[str] = None,  # default: batched
+                   engine: Optional[SimulationEngine] = None) -> SimResult:
     fl = cfg.fl
     n = len(clients)
     max_rounds = max_rounds or fl.rounds
     rng = np.random.default_rng(seed)
-    jrng = jax.random.PRNGKey(seed)
+    # one independent key per consumer (init / payloads / evals)
+    init_key, payload_key, eval_key = jax.random.split(
+        jax.random.PRNGKey(seed), 3)
 
     # --- network + η + static bandwidth allocation -------------------------
+    policy = get_policy(fl.eta_mode)
     net = EdgeNetwork.drop(cfg.wireless, n, seed=seed,
-                           uniform_distance=(fl.eta_mode == "equal"))
-    if fl.eta_mode == "equal":
-        eta = relative_frequencies(n, "equal")
-    else:
-        eta = relative_frequencies(n, "rates", rates=net.mean_rates())
+                           uniform_distance=policy.uniform_drop)
+    eta = policy.frequencies(n, net)
 
     h_mean = cfg.wireless.rayleigh_scale * float(np.sqrt(np.pi / 2))
     mean_chans = [net.channel(i, h_mean) for i in range(n)]
@@ -80,10 +97,29 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
     else:
         raise ValueError(f"unknown bandwidth policy {bandwidth_policy!r}")
 
-    # --- model / payloads ---------------------------------------------------
-    params0 = model.init(jrng)
+    # --- model / engine -----------------------------------------------------
+    params0 = model.init(init_key)
     z_bits = cfg.wireless.grad_bits or model_bits(params0)
-    payload_fn = make_payload_fn(model, fl, algorithm)
+    if engine is None:
+        engine = SimulationEngine(model, fl, algorithm,
+                                  payload_mode=payload_mode or "batched")
+    else:
+        if engine.algorithm != algorithm or engine.model is not model:
+            raise ValueError(
+                f"engine was built for algorithm {engine.algorithm!r} and "
+                f"its own model; cannot run algorithm {algorithm!r} with it")
+        # the engine's compiled payload fns bake in its FLConfig — only the
+        # scheduling-side eta_mode may differ between runs sharing an engine
+        if dataclasses.replace(engine.fl, eta_mode=fl.eta_mode) != fl:
+            raise ValueError("engine.fl differs from cfg.fl beyond eta_mode; "
+                             "build a fresh SimulationEngine for this config")
+        if payload_mode is not None and payload_mode != engine.payload_mode:
+            raise ValueError(
+                f"payload_mode={payload_mode!r} conflicts with the supplied "
+                f"engine's mode {engine.payload_mode!r}")
+    # snapshot so SimResult reports THIS run's dispatch counts even when the
+    # engine (and its lifetime counters) is shared across a sweep
+    disp0, pay0 = engine.dispatches, engine.payloads_computed
     # per-UE inner learning rates α_i (paper §II-B: "easily extended to the
     # general case when UEs have diverse learning rate α_i")
     if fl.alpha_spread > 0:
@@ -102,6 +138,11 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
     d_i = np.array([min(fl.inner_batch + fl.outer_batch + fl.hessian_batch,
                         len(c)) for c in clients])
     busy_time = np.zeros(n)
+    # batch shapes are a pure function of the shard size; a round whose UEs
+    # share one signature can take the fused path, mixed rounds fall back to
+    # bucketed payloads (rule lives on ClientDataset, next to the sampler)
+    batch_sig = [c.triplet_sizes(fl.inner_batch, fl.outer_batch,
+                                 fl.hessian_batch) for c in clients]
 
     def cycle_duration(i: int) -> float:
         h = float(net.sample_fading()[i])
@@ -113,21 +154,15 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
     # --- eval ----------------------------------------------------------------
     eval_idx = rng.choice(n, size=min(eval_clients, n), replace=False)
 
-    @jax.jit
-    def _eval_one(params, batches, r):
-        ploss, paux = personalized_eval(model, fl, params, batches, r)
-        gout = model.loss(params, batches["outer"], r)
-        gloss, gaux = gout if isinstance(gout, tuple) else (gout, {})
-        acc = paux.get("acc", jnp.nan) if isinstance(paux, dict) else jnp.nan
-        return ploss, gloss, acc
-
-    def evaluate(params, r) -> Tuple[float, float, float]:
+    def evaluate(params, k: int) -> Tuple[float, float, float]:
+        r = jax.random.fold_in(eval_key, k)
         pl, gl, ac = [], [], []
         for ci in eval_idx:
             c = clients[ci]
+            r, sub = jax.random.split(r)
             batches = {"inner": c.sample(fl.inner_batch),
-                       "outer": {k: v for k, v in c.test.items()}}
-            p, g, a = _eval_one(params, batches, r)
+                       "outer": {k2: v for k2, v in c.test.items()}}
+            p, g, a = engine.eval_one(params, batches, sub)
             pl.append(float(p)); gl.append(float(g)); ac.append(float(a))
         acc = (float(np.nanmean(ac))
                if np.any(np.isfinite(ac)) else float("nan"))
@@ -148,40 +183,88 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
 
     times, plosses, glosses, accs, rounds_at = [], [], [], [], []
     t_now = 0.0
-    jr = jrng
+    do_eval = eval_every > 0            # 0 → pure-throughput mode, no evals
 
-    p0, g0, a0 = evaluate(params0, jr)
-    times.append(0.0); plosses.append(p0); glosses.append(g0); accs.append(a0)
-    rounds_at.append(0)
+    if do_eval:
+        p0, g0, a0 = evaluate(params0, 0)
+        times.append(0.0); plosses.append(p0); glosses.append(g0)
+        accs.append(a0); rounds_at.append(0)
 
     while server.round < max_rounds and heap:
-        t_now, _, ue, version, dur, ev_epoch = heapq.heappop(heap)
-        if ev_epoch != epoch[ue]:
-            continue                    # abandoned (stale-refresh) computation
-        busy_time[ue] += dur            # only completed cycles count as busy
-        jr, sub = jax.random.split(jr)
-        batches = clients[ue].sample_triplet(fl.inner_batch, fl.outer_batch,
-                                             fl.hessian_batch)
-        payload = payload_fn(held_params[ue], batches, sub,
-                             float(alphas[ue]))
-        result = server.on_arrival(ue, payload)
-        if result is None:
-            continue
-        for i in result["distribute"]:
-            held_params[i] = result["params"]
-            epoch[i] += 1               # cancels any in-flight computation
-            dur_i = cycle_duration(i)
-            heapq.heappush(heap, (t_now + dur_i, seq, i, result["round"],
-                                  dur_i, int(epoch[i])))
-            seq += 1
-        k = result["round"]
-        if k % eval_every == 0 or k == max_rounds:
-            p, g, a = evaluate(result["params"], jr)
-            times.append(t_now); plosses.append(p); glosses.append(g)
-            accs.append(a); rounds_at.append(k)
-            if verbose:
-                print(f"[{name or algorithm}-{mode}] round {k:4d} "
-                      f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
+        # ---- drain one round's worth of arrivals ---------------------------
+        # The server advances only on its (A − pending)-th upload; until then
+        # no distribution happens, so no epoch can change and no new event
+        # can precede the ones already queued — the next `need` epoch-valid
+        # pops are exactly the arrivals the sequential loop would process,
+        # and their payloads are all computable now, as one batch.
+        need = server.arrivals_until_round()
+        batch: List[Tuple[float, int, int, float]] = []  # (t, ue, seq, dur)
+        while heap and len(batch) < need:
+            t, sq, ue, _version, dur, ev_epoch = heapq.heappop(heap)
+            if ev_epoch != epoch[ue]:
+                continue                # abandoned (stale-refresh) cycle
+            batch.append((t, ue, sq, dur))
+        if not batch:
+            break
+
+        held = [held_params[ue] for _, ue, _, _ in batch]
+        triplets = [clients[ue].sample_triplet(fl.inner_batch, fl.outer_batch,
+                                               fl.hessian_batch)
+                    for _, ue, _, _ in batch]
+        a_i = [alphas[ue] for _, ue, _, _ in batch]
+
+        def handle(result) -> None:
+            nonlocal seq
+            for i in result["distribute"]:
+                held_params[i] = result["params"]
+                epoch[i] += 1           # cancels any in-flight computation
+                dur_i = cycle_duration(i)
+                heapq.heappush(heap, (t_now + dur_i, seq, i, result["round"],
+                                      dur_i, int(epoch[i])))
+                seq += 1
+            k = result["round"]
+            if do_eval and (k % eval_every == 0 or k == max_rounds):
+                p, g, a = evaluate(result["params"], k)
+                times.append(t_now); plosses.append(p); glosses.append(g)
+                accs.append(a); rounds_at.append(k)
+                if verbose:
+                    print(f"[{name or algorithm}-{mode}] round {k:4d} "
+                          f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
+
+        if (engine.payload_mode == "batched" and len(batch) == server.a
+                and server.a <= engine.max_bucket
+                and len({batch_sig[ue] for _, ue, _, _ in batch}) == 1):
+            # fused fast path: the whole round — per-arrival RNG, vmapped
+            # payloads, Eq. (8) stale aggregation — fuses into one device
+            # dispatch per model-version group
+            for t, ue, _sq, dur in batch:
+                t_now = t
+                busy_time[ue] += dur    # only completed cycles count as busy
+
+            def aggregate(params, weights):
+                return engine.round_update(
+                    params, held, triplets, [sq for _, _, sq, _ in batch],
+                    a_i, weights, beta=fl.beta, base_key=payload_key)
+
+            handle(server.on_round_batch([ue for _, ue, _, _ in batch],
+                                         aggregate))
+        else:
+            payloads = engine.compute_payloads(
+                held, triplets,
+                [jax.random.fold_in(payload_key, sq)
+                 for _, _, sq, _ in batch],
+                a_i)
+            # ---- feed the server in arrival order --------------------------
+            for (t, ue, _sq, dur), payload in zip(batch, payloads):
+                t_now = t
+                busy_time[ue] += dur    # only completed cycles count as busy
+                result = server.on_arrival(ue, payload)
+                if result is not None:
+                    handle(result)
+
+    # drain the async dispatch queue so wall-clock timings of this function
+    # include all device work it issued (jit dispatch is asynchronous)
+    jax.block_until_ready(jax.tree.leaves(server.params))
 
     wait_frac = float(1.0 - busy_time.sum() / max(n * t_now, 1e-9))
     return SimResult(
@@ -192,4 +275,6 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
         pi=server.pi_matrix(), eta_target=eta,
         eta_realised=server.realised_eta(),
         wait_fraction=max(wait_frac, 0.0),
+        payload_dispatches=engine.dispatches - disp0,
+        payloads_computed=engine.payloads_computed - pay0,
     )

@@ -93,14 +93,8 @@ def fused_adam_tree(params, m, v, grads, *, lr, t, b1=0.9, b2=0.95, eps=1e-8,
     return new_p, new_m, new_v
 
 
-def stale_aggregate_tree(params, buffers, mask, *, beta: float,
-                         interpret: bool = True):
-    """Pytree Eq.-(8) update: params_i ← params_i − β/A Σ_c π_c buf_c,i."""
-    def upd(p, buf):
-        shape = p.shape
-        out = stale_aggregate_flat(
-            p.reshape(-1), buf.reshape(buf.shape[0], -1), mask, beta=beta,
-            interpret=interpret)
-        return out.reshape(shape)
-
-    return jax.tree.map(upd, params, buffers)
+# Pytree Eq.-(8) update now lives in kernels/stale_aggregate.py as the
+# unified aggregation API (single concat buffer + cached treedef) — this
+# re-export keeps the historical ops.* entry point working.
+from repro.kernels.stale_aggregate import (masked_aggregate_tree,  # noqa: E402,F401
+                                           stale_aggregate_tree)

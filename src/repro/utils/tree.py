@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def tree_add(a, b):
@@ -62,3 +63,66 @@ def tree_cast(a, dtype):
             return x.astype(dtype)
         return x
     return jax.tree.map(_cast, a)
+
+
+# ---------------------------------------------------------------------------
+# Cached flatten/unflatten — the single-buffer path behind the unified
+# aggregation API (kernels/stale_aggregate.py)
+# ---------------------------------------------------------------------------
+
+class TreeFlattener:
+    """Flatten a pytree into ONE contiguous f32 vector and back.
+
+    The treedef plus per-leaf (shape, dtype, offset) metadata are computed
+    once and cached by structure (``TreeFlattener.for_tree``), so repeated
+    aggregation calls — one per simulated round — pay only the concat, not
+    re-deriving structure on the host.  All methods are jit-traceable.
+    """
+
+    _CACHE: dict = {}
+
+    def __init__(self, treedef, shapes, dtypes):
+        self.treedef = treedef
+        self.shapes = tuple(shapes)
+        self.dtypes = tuple(dtypes)
+        self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+        offs = np.cumsum((0,) + self.sizes)
+        self.offsets = tuple(int(o) for o in offs[:-1])
+        self.size = int(offs[-1])
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def for_tree(cls, tree) -> "TreeFlattener":
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        shapes = tuple(tuple(x.shape) for x in leaves)
+        dtypes = tuple(jnp.asarray(x).dtype for x in leaves)
+        key = (treedef, shapes, dtypes)
+        hit = cls._CACHE.get(key)
+        if hit is None:
+            hit = cls._CACHE[key] = cls(treedef, shapes, dtypes)
+        return hit
+
+    # -- flatten -----------------------------------------------------------
+    def flatten(self, tree, dtype=jnp.float32):
+        """tree → single [size] vector (one concat buffer)."""
+        leaves = self.treedef.flatten_up_to(tree)
+        return jnp.concatenate(
+            [jnp.ravel(jnp.asarray(x)).astype(dtype) for x in leaves])
+
+    def flatten_stacked(self, tree, dtype=jnp.float32):
+        """Tree whose leaves carry a leading axis C → [C, size] matrix."""
+        leaves = self.treedef.flatten_up_to(tree)
+        c = jnp.asarray(leaves[0]).shape[0]
+        return jnp.concatenate(
+            [jnp.reshape(jnp.asarray(x), (c, -1)).astype(dtype)
+             for x in leaves], axis=1)
+
+    # -- unflatten ---------------------------------------------------------
+    def unflatten(self, flat, dtype=None):
+        """[size] vector → tree; leaves restored to their original dtypes
+        (or all cast to ``dtype`` when given)."""
+        leaves = [
+            jnp.reshape(flat[o:o + s], shape).astype(dtype or dt)
+            for o, s, shape, dt in zip(self.offsets, self.sizes,
+                                       self.shapes, self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)

@@ -1,7 +1,10 @@
 """Theorems 2–4: Lambert-W, rate inversion, equal-finish optimality."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # clean container (tier-1)
+    from repro.utils.hypofallback import given, settings, strategies as st
 
 from repro.core.bandwidth import (UEChannel, bandwidth_for_rate,
                                   bandwidth_for_time, equal_finish_allocation,

@@ -1,7 +1,10 @@
 """Non-iid partitioner + synthetic dataset properties (hypothesis)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # clean container (tier-1)
+    from repro.utils.hypofallback import given, settings, strategies as st
 
 from repro.data import (partition_noniid, synthetic_mnist,
                         synthetic_shakespeare)

@@ -46,6 +46,8 @@ with sharding.use_mesh(mesh, rules):
     lowered = jitted.lower(*case.args)
     compiled = lowered.compile()
 cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):      # jax < 0.4.35 returned [dict]
+    cost = cost[0] if cost else {}
 print(json.dumps({"ok": True, "flops": float(cost.get("flops", 0.0))}))
 """
 

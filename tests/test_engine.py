@@ -1,0 +1,190 @@
+"""SimulationEngine: batched == sequential, bucket padding, unified Eq. (8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ExperimentConfig, FLConfig
+from repro.configs import get_config
+from repro.data import partition_noniid, synthetic_mnist
+from repro.fl.engine import SimulationEngine, bucket_size
+from repro.fl.simulation import run_simulation
+from repro.kernels.stale_aggregate import (masked_aggregate_tree,
+                                           stale_aggregate_tree)
+from repro.models import build_model
+from repro.utils.tree import TreeFlattener
+
+_DATA = synthetic_mnist(n=600, seed=21)
+_MODEL = build_model(get_config("mnist_dnn"))
+
+
+def _cfg(n=8, a=3, s=3):
+    return ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        fl=FLConfig(n_ues=n, participants_per_round=a, staleness_bound=s,
+                    alpha=0.03, beta=0.07, inner_batch=8, outer_batch=8,
+                    hessian_batch=8))
+
+
+def _clients(n=8, seed=0):
+    # fresh per run: each ClientDataset owns a stateful np generator, so
+    # equivalence runs must not share sampler state
+    return partition_noniid(_DATA, n, l=4, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# batched vs sequential equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode,algorithm", [("semi", "perfed"),
+                                            ("semi", "fedavg"),
+                                            ("sync", "perfed"),
+                                            ("async", "perfed")])
+def test_batched_reproduces_sequential(mode, algorithm):
+    cfg = _cfg()
+    kw = dict(algorithm=algorithm, mode=mode, max_rounds=6, eval_every=2,
+              seed=0)
+    r_seq = run_simulation(cfg, _MODEL, _clients(), payload_mode="sequential",
+                           **kw)
+    r_bat = run_simulation(cfg, _MODEL, _clients(), payload_mode="batched",
+                           **kw)
+    np.testing.assert_array_equal(r_seq.pi, r_bat.pi)
+    np.testing.assert_allclose(r_seq.losses, r_bat.losses, rtol=1e-5)
+    np.testing.assert_allclose(r_seq.times, r_bat.times)
+    assert r_bat.payloads_computed == r_seq.payloads_computed
+    # the whole point: far fewer device dispatches on the batched path
+    if mode != "async":
+        assert r_bat.payload_dispatches < r_seq.payload_dispatches
+
+
+def test_same_seed_is_reproducible():
+    cfg = _cfg()
+    kw = dict(algorithm="perfed", mode="semi", max_rounds=5, eval_every=2,
+              seed=3, payload_mode="batched")
+    a = run_simulation(cfg, _MODEL, _clients(), **kw)
+    b = run_simulation(cfg, _MODEL, _clients(), **kw)
+    np.testing.assert_array_equal(a.losses, b.losses)
+    np.testing.assert_array_equal(a.pi, b.pi)
+
+
+# ---------------------------------------------------------------------------
+# bucket padding
+# ---------------------------------------------------------------------------
+
+def test_bucket_size_powers_of_two():
+    assert [bucket_size(m) for m in (1, 2, 3, 4, 5, 9, 17)] == \
+        [1, 2, 4, 4, 8, 16, 32]
+    assert bucket_size(300, max_bucket=256) == 256
+    with pytest.raises(ValueError):
+        bucket_size(0)
+
+
+@pytest.mark.parametrize("m", [1, 3, 5, 7])
+def test_padded_bucket_matches_per_item(m):
+    """Non-power-of-2 batch sizes: padded lanes must not leak into results."""
+    fl = _cfg().fl
+    clients = _clients()
+    params = _MODEL.init(jax.random.PRNGKey(1))
+    eng_b = SimulationEngine(_MODEL, fl, "perfed", payload_mode="batched")
+    eng_s = SimulationEngine(_MODEL, fl, "perfed", payload_mode="sequential")
+
+    batches = [clients[i % len(clients)].sample_triplet(8, 8, 8)
+               for i in range(m)]
+    rngs = [jax.random.fold_in(jax.random.PRNGKey(7), i) for i in range(m)]
+    alphas = [0.03 + 0.01 * i for i in range(m)]
+    got = eng_b.compute_payloads([params] * m, batches, rngs, alphas)
+    want = eng_s.compute_payloads([params] * m, batches, rngs, alphas)
+    assert eng_b.dispatches == 1 and eng_s.dispatches == m
+    for g, w in zip(got, want):
+        for gl, wl in zip(jax.tree.leaves(g), jax.tree.leaves(w)):
+            np.testing.assert_allclose(np.asarray(gl), np.asarray(wl),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_heterogeneous_shapes_grouped():
+    """Arrivals whose shard is smaller than the batch size (shape stragglers)
+    must land in their own bucket, not crash the vmap."""
+    fl = _cfg().fl
+    clients = _clients()
+    params = _MODEL.init(jax.random.PRNGKey(1))
+    eng = SimulationEngine(_MODEL, fl, "perfed", payload_mode="batched")
+    big = [clients[i].sample_triplet(8, 8, 8) for i in range(3)]
+    small = [clients[0].sample_triplet(2, 2, 2)]
+    batches = big + small
+    rngs = [jax.random.PRNGKey(i) for i in range(4)]
+    out = eng.compute_payloads([params] * 4, batches, rngs, [0.03] * 4)
+    assert len(out) == 4 and all(o is not None for o in out)
+    assert eng.dispatches == 2        # one per shape signature
+
+
+# ---------------------------------------------------------------------------
+# unified aggregation API vs tree_map reference
+# ---------------------------------------------------------------------------
+
+def _tree_map_reference(params, payloads, mask, beta):
+    """The hand-rolled reduction the server used to do."""
+    agg = None
+    for g, w in zip(payloads, np.asarray(mask)):
+        scaled = jax.tree.map(lambda x: float(w) * x, g)
+        agg = scaled if agg is None else jax.tree.map(jnp.add, agg, scaled)
+    a = max(float(np.asarray(mask).sum()), 1.0)
+    return jax.tree.map(lambda g, p: p - beta / a * g, agg, params)
+
+
+def test_stale_aggregate_tree_matches_tree_map_reference(rng):
+    """On a real model pytree (nested dicts, mixed shapes)."""
+    params = _MODEL.init(rng)
+    keys = jax.random.split(jax.random.PRNGKey(5), 4)
+    payloads = [jax.tree.map(
+        lambda p, k=k: jax.random.normal(k, p.shape, p.dtype), params)
+        for k in keys]
+    mask = jnp.array([1.0, 0.0, 2.5, 1.0])
+    got = stale_aggregate_tree(params, payloads, mask, beta=0.07)
+    want = _tree_map_reference(params, payloads, mask, 0.07)
+    assert jax.tree_util.tree_structure(got) == \
+        jax.tree_util.tree_structure(params)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_stale_aggregate_tree_stacked_and_pallas_agree(rng):
+    params = _MODEL.init(rng)
+    keys = jax.random.split(jax.random.PRNGKey(6), 3)
+    payloads = [jax.tree.map(
+        lambda p, k=k: jax.random.normal(k, p.shape, p.dtype), params)
+        for k in keys]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *payloads)
+    mask = jnp.array([1.0, 1.0, 0.0])
+    a = stale_aggregate_tree(params, payloads, mask, beta=0.1, backend="jnp")
+    b = stale_aggregate_tree(params, stacked, mask, beta=0.1, backend="jnp")
+    c = stale_aggregate_tree(params, stacked, mask, beta=0.1,
+                             backend="pallas")
+    for x, y, z in zip(jax.tree.leaves(a), jax.tree.leaves(b),
+                       jax.tree.leaves(c)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(x), np.asarray(z), rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_masked_aggregate_tree_is_masked_mean(rng):
+    params = _MODEL.init(rng)
+    stacked = jax.tree.map(
+        lambda p: jnp.stack([jnp.full(p.shape, float(i + 1), jnp.float32)
+                             for i in range(3)]), params)
+    agg = masked_aggregate_tree(stacked, jnp.array([1.0, 0.0, 1.0]))
+    for leaf in jax.tree.leaves(agg):
+        np.testing.assert_allclose(np.asarray(leaf), (1.0 + 3.0) / 2.0,
+                                   rtol=1e-6)
+
+
+def test_tree_flattener_roundtrip(rng):
+    params = _MODEL.init(rng)
+    flat = TreeFlattener.for_tree(params)
+    assert flat is TreeFlattener.for_tree(params)      # cached by structure
+    vec = flat.flatten(params)
+    assert vec.ndim == 1 and vec.shape[0] == flat.size
+    back = flat.unflatten(vec)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(params)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

@@ -1,7 +1,10 @@
 """Algorithm 2 greedy scheduler + Eq. (42)/(43) — property-based."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # clean container (tier-1)
+    from repro.utils.hypofallback import given, settings, strategies as st
 
 from repro.config import FLConfig
 from repro.core.scheduler import (estimate_A_K, greedy_schedule,

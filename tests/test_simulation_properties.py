@@ -1,7 +1,10 @@
 """Hypothesis property tests on the event-driven simulator's invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # clean container (tier-1)
+    from repro.utils.hypofallback import given, settings, strategies as st
 
 from repro.config import ExperimentConfig, FLConfig
 from repro.configs import get_config
