@@ -1,0 +1,114 @@
+"""Mobile multi-cell throughput: rounds/sec across UE speed × cell count.
+
+Sweeps the new mobility subsystem at scale (default: 1024 UEs) — static vs
+vehicular UEs, single cell vs a 4-cell hierarchy — and records rounds/sec,
+handover counts, and cloud merges per point.  Emits the standard CSV rows
+and writes ``BENCH_mobility.json``.
+
+    PYTHONPATH=src python -m benchmarks.mobility            # full sweep
+    PYTHONPATH=src python benchmarks/mobility.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):          # run as a script, not -m
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+
+N_UES = 1024
+SPEEDS = (0.0, 20.0)         # m/s: static, vehicular
+CELLS = (1, 4)
+ROUNDS = 8
+OUT_JSON = "BENCH_mobility.json"
+
+SMOKE_N_UES = 64
+SMOKE_SPEEDS = (30.0,)
+SMOKE_CELLS = (3,)
+SMOKE_ROUNDS = 4             # ≥ cloud_sync_every → exercises one merge
+
+
+def _setup(n_ues: int, seed: int = 0):
+    from repro.config import ExperimentConfig, FLConfig
+    from repro.configs import get_config
+    from repro.data import partition_noniid, synthetic_mnist
+    from repro.models import build_model
+
+    # the engine_throughput regime: first-order payloads, tiny batches —
+    # the mobile-edge workload where scheduling dynamics dominate
+    cfg = ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        fl=FLConfig(n_ues=n_ues,
+                    participants_per_round=max(1, n_ues // 16),
+                    staleness_bound=8, alpha=0.03, beta=0.07,
+                    first_order=True,
+                    inner_batch=4, outer_batch=4, hessian_batch=4))
+    model = build_model(cfg.model)
+    data = synthetic_mnist(n=max(2500, 10 * n_ues), seed=seed)
+    clients = partition_noniid(data, n_ues, l=4, seed=seed)
+    return cfg, model, clients
+
+
+def _point(cfg, model, clients, *, speed: float, n_cells: int,
+           rounds: int) -> dict:
+    import dataclasses
+
+    from repro.config import MobilityConfig
+    from repro.fl.simulation import run_simulation
+
+    cfg = dataclasses.replace(cfg, mobility=MobilityConfig(
+        enabled=True, model="random_waypoint", speed_mps=speed,
+        n_cells=n_cells, hierarchy=n_cells > 1, cloud_sync_every=4))
+    t0 = time.perf_counter()
+    res = run_simulation(cfg, model, clients, algorithm="perfed",
+                         mode="semi", bandwidth_policy="equal",
+                         max_rounds=rounds, eval_every=0, seed=0)
+    wall = time.perf_counter() - t0
+    completed = int(res.pi.shape[0])      # rounds actually closed, not asked
+    return {"speed_mps": speed, "n_cells": n_cells,
+            "rounds_requested": rounds, "rounds": completed,
+            "wall_s": wall,
+            "rounds_per_sec": completed / wall,
+            "handovers": res.handovers,
+            "cloud_rounds": res.cloud_rounds,
+            "sim_time_s": res.total_time,
+            "payload_dispatches": res.payload_dispatches}
+
+
+def run(smoke: bool = False) -> None:
+    n_ues = SMOKE_N_UES if smoke else N_UES
+    speeds = SMOKE_SPEEDS if smoke else SPEEDS
+    cells = SMOKE_CELLS if smoke else CELLS
+    rounds = SMOKE_ROUNDS if smoke else ROUNDS
+
+    cfg, model, clients = _setup(n_ues)
+    results = {"n_ues": n_ues, "rounds": rounds, "smoke": smoke, "sweep": []}
+    for n_cells in cells:
+        for speed in speeds:
+            pt = _point(cfg, model, clients, speed=speed, n_cells=n_cells,
+                        rounds=rounds)
+            results["sweep"].append(pt)
+            emit(f"mobility/v={speed:g}/cells={n_cells}/n={n_ues}",
+                 pt["wall_s"] / max(pt["rounds"], 1) * 1e6,
+                 f"rps={pt['rounds_per_sec']:.2f};"
+                 f"handovers={pt['handovers']};"
+                 f"cloud={pt['cloud_rounds']}")
+    if not smoke:
+        moving = [p for p in results["sweep"]
+                  if p["speed_mps"] > 0 and p["n_cells"] > 1]
+        assert any(p["handovers"] > 0 for p in moving), \
+            "no handover recorded in any moving multi-cell point"
+    # smoke mode must not clobber the committed full-sweep artifact
+    out = "BENCH_mobility_smoke.json" if smoke else OUT_JSON
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

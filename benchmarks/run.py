@@ -23,6 +23,7 @@ SUITES = [
     "fo_ablation",       # exact Eq.-7 HVP vs first-order variant
     "kernels",           # Pallas kernels vs oracles
     "engine_throughput", # batched vs sequential simulation engine
+    "mobility",          # mobile multi-cell: speed × cells at 1024 UEs
     "roofline",          # §Roofline — from dry-run artifacts
 ]
 

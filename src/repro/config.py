@@ -211,10 +211,31 @@ class WirelessConfig:
     tx_power_w: float = 0.01             # p_i
     cell_radius_m: float = 200.0
     rayleigh_scale: float = 40.0         # paper's Rayleigh parameter
-    grad_bits: float = 0.0               # Z: 0 → derived from model size (32 bits/param)
+    grad_bits: float = 0.0               # Z: 0 → derived from model size
+    bits_per_param: int = 32             # payload precision (16 = fp16 uploads)
     cpu_cycles_per_sample: float = 2e5   # c_i
     cpu_freq_hz: float = 1e9             # ϑ_i nominal (heterogeneity multiplies this)
     cpu_hetero: float = 4.0              # max/min CPU speed ratio across UEs
+
+
+@dataclass(frozen=True)
+class MobilityConfig:
+    """Mobile multi-cell edge extension (``src/repro/mobility``).
+
+    ``enabled=False`` keeps the original single-static-cell path untouched;
+    the degenerate mobile configuration (speed 0, one cell, hierarchy off)
+    reproduces it bitwise (pinned by ``tests/test_mobility.py``).
+    """
+    enabled: bool = False
+    model: str = "random_waypoint"       # static | random_waypoint | gauss_markov
+    speed_mps: float = 1.0               # mean UE speed; ≤ 0 → static
+    pause_s: float = 0.0                 # random-waypoint pause at each waypoint
+    gm_alpha: float = 0.85               # Gauss-Markov memory parameter
+    step_s: float = 1.0                  # mobility integration step [simulated s]
+    n_cells: int = 1                     # base stations (hex-ish layout)
+    hierarchy: bool = False              # per-cell edge servers + cloud tier
+    cloud_sync_every: int = 5            # cloud merge every N edge rounds
+    cell_participants: int = 0           # per-cell A (0 → ceil(A / n_cells))
 
 
 @dataclass(frozen=True)
@@ -271,6 +292,7 @@ class ExperimentConfig:
     model: ModelConfig = field(default_factory=ModelConfig)
     fl: FLConfig = field(default_factory=FLConfig)
     wireless: WirelessConfig = field(default_factory=WirelessConfig)
+    mobility: MobilityConfig = field(default_factory=MobilityConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
     mesh: MeshConfig = field(default_factory=MeshConfig)
 

@@ -1,0 +1,181 @@
+"""Hierarchical cell → cloud aggregation (HPFL-style, cf. arXiv:2303.10580).
+
+Each cell runs its own ``SemiSyncServer`` — the Algorithm-1 / Eq.-8
+semi-synchronous protocol, unchanged, over the UEs currently associated
+with that cell — and a cloud tier periodically merges the per-cell edge
+models with ``masked_aggregate_tree`` (the same unified aggregation API the
+edge update itself uses), weighted by each cell's arrival count since the
+last merge.  After a merge every edge server continues from the merged
+model; UEs receive it lazily, at their next distribution event, exactly as
+they receive ordinary round updates.
+
+Cell membership is dynamic: ``handover(ue, src, dst)`` retires the UE from
+``src`` (a sentinel version means "never considered stale here") and grafts
+its *current staleness* onto ``dst``'s round clock — so a UE that hands
+over mid-computation shows up in the new cell exactly as stale as it really
+is, and the τ > S forced-refresh rule fires across cell boundaries
+(handover-induced staleness).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.server import SemiSyncServer, ServerConfig
+from repro.kernels.stale_aggregate import masked_aggregate_tree
+
+# version sentinel: staleness = round − version stays hugely negative, so a
+# non-member UE never triggers this cell's forced-refresh rule
+NON_MEMBER = np.int64(1) << 60
+
+
+@dataclass(frozen=True)
+class HierarchyConfig:
+    n_cells: int
+    cloud_sync_every: int = 5        # merge every N completed edge rounds
+    cell_weighting: str = "arrivals"  # arrivals | uniform
+
+
+class HierarchicalServer:
+    """Per-cell ``SemiSyncServer`` edge tier + periodic cloud merge."""
+
+    def __init__(self, params: Any, cell_cfgs: Sequence[ServerConfig],
+                 hcfg: HierarchyConfig,
+                 members: Sequence[np.ndarray]):
+        if len(cell_cfgs) != hcfg.n_cells or len(members) != hcfg.n_cells:
+            raise ValueError("need one ServerConfig + member set per cell")
+        self.hcfg = hcfg
+        self.cells = [SemiSyncServer(params, cfg) for cfg in cell_cfgs]
+        n = cell_cfgs[0].n_ues
+        self.member_cell = np.zeros(n, dtype=np.int64)
+        for c, srv in enumerate(self.cells):
+            srv.ue_version[:] = NON_MEMBER
+            idx = np.asarray(members[c], dtype=np.int64)
+            srv.ue_version[idx] = 0
+            self.member_cell[idx] = c
+        self.cloud_params = params
+        self.edge_rounds = 0             # completed rounds across all cells
+        self.cloud_rounds = 0            # completed cloud merges
+        self._arrivals_since_sync = np.zeros(hcfg.n_cells, dtype=np.int64)
+        self.history_pi: List[np.ndarray] = []   # edge-round order, all cells
+        self.history_cell: List[int] = []
+
+    # ------------------------------------------------------------------
+    def cell(self, c: int) -> SemiSyncServer:
+        return self.cells[c]
+
+    def arrivals_until_round(self, c: int) -> int:
+        return self.cells[c].arrivals_until_round()
+
+    @property
+    def params(self) -> Any:
+        """Latest cloud model (cell 0's edge model before the first merge)."""
+        return self.cloud_params if self.cloud_rounds else \
+            self.cells[0].params
+
+    # ------------------------------------------------------------------
+    def handover(self, ue: int, src: int, dst: int) -> None:
+        """Move a UE between cells, carrying its staleness across."""
+        if src == dst:
+            return
+        tau = self.cells[src].staleness(ue)
+        self.cells[src].ue_version[ue] = NON_MEMBER
+        # round − version = τ in the new cell's clock (version may go
+        # negative for a UE staler than the cell is old — still correct)
+        self.cells[dst].ue_version[ue] = self.cells[dst].round - max(tau, 0)
+        self.member_cell[ue] = dst
+
+    def _visiting_version(self, c: int, ue: int) -> np.int64:
+        """A version giving a *departed* UE a sensible τ in cell ``c``'s
+        clock: its current staleness, read from the cell it now lives in."""
+        cur = int(self.member_cell[ue])
+        tau = max(int(self.cells[cur].staleness(ue)), 0)
+        return np.int64(self.cells[c].round - tau)
+
+    # ------------------------------------------------------------------
+    def on_arrival(self, c: int, ue: int,
+                   payload: Any) -> Optional[Dict[str, Any]]:
+        srv = self.cells[c]
+        # an upload can complete at a cell the UE has since handed over
+        # from (it was in flight when the handover hit) — give it a sane
+        # staleness for the weighting, without resurrecting membership
+        departed = int(self.member_cell[ue]) != c
+        if departed:
+            srv.ue_version[ue] = self._visiting_version(c, ue)
+        res = srv.on_arrival(ue, payload)
+        if res is None:
+            if departed:
+                srv.ue_version[ue] = NON_MEMBER
+            return None
+        return self._finish(c, res)
+
+    def on_round_batch(self, c: int, ues: Sequence[int],
+                       aggregate_fn: Callable) -> Dict[str, Any]:
+        srv = self.cells[c]
+        for u in ues:
+            if int(self.member_cell[u]) != c:
+                srv.ue_version[u] = self._visiting_version(c, u)
+        return self._finish(c, srv.on_round_batch(ues, aggregate_fn))
+
+    def _finish(self, c: int, res: Dict[str, Any]) -> Dict[str, Any]:
+        self.edge_rounds += 1
+        self.history_pi.append(self.cells[c].history_pi[-1])
+        self.history_cell.append(c)
+        self._arrivals_since_sync[c] += self.cells[c].a
+        res = dict(res)
+        # the cell's _advance_round stamped fresh versions on everyone it
+        # distributes to — departed UEs must not be resurrected as members
+        # here, nor receive this cell's model (they live elsewhere now)
+        srv = self.cells[c]
+        keep = []
+        for i in res["distribute"]:
+            if int(self.member_cell[i]) == c:
+                keep.append(i)
+            else:
+                srv.ue_version[i] = NON_MEMBER
+        res["distribute"] = keep
+        res["cell"] = c
+        res["round"] = self.edge_rounds      # global edge-round clock
+        res["cloud_synced"] = False
+        every = self.hcfg.cloud_sync_every
+        if every > 0 and self.edge_rounds % every == 0:
+            self.cloud_sync()
+            res["params"] = self.cells[c].params   # the merged model
+            res["cloud_synced"] = True
+        return res
+
+    # ------------------------------------------------------------------
+    def cloud_sync(self) -> None:
+        """Merge cell models: weighted mean via ``masked_aggregate_tree``."""
+        if self.hcfg.cell_weighting == "arrivals" and \
+                self._arrivals_since_sync.sum() > 0:
+            w = self._arrivals_since_sync.astype(np.float32)
+        else:
+            w = np.ones(self.hcfg.n_cells, np.float32)
+        merged = masked_aggregate_tree([srv.params for srv in self.cells],
+                                       jnp.asarray(w))
+        ref = self.cells[0].params
+        merged = jax.tree.map(
+            lambda m, p: m.astype(jnp.asarray(p).dtype), merged, ref)
+        for srv in self.cells:
+            srv.params = merged
+        self.cloud_params = merged
+        self.cloud_rounds += 1
+        self._arrivals_since_sync[:] = 0
+
+    # ------------------------------------------------------------------
+    def pi_matrix(self) -> np.ndarray:
+        """Realised Π across all cells, rows in edge-round completion order."""
+        if not self.history_pi:
+            n = self.cells[0].cfg.n_ues
+            return np.zeros((0, n), dtype=np.int64)
+        return np.stack(self.history_pi)
+
+    def realised_eta(self) -> np.ndarray:
+        pi = self.pi_matrix()
+        tot = pi.sum()
+        return pi.sum(0) / max(tot, 1)

@@ -42,7 +42,7 @@ from repro.fl.client import make_payload_fn, personalized_eval
 from repro.kernels.stale_aggregate import stale_aggregate_tree
 from repro.utils.tree import TreeFlattener
 
-__all__ = ["SimulationEngine", "bucket_size"]
+__all__ = ["SimulationEngine", "bucket_size", "ensure_engine"]
 
 
 def bucket_size(m: int, max_bucket: int = 256) -> int:
@@ -53,6 +53,33 @@ def bucket_size(m: int, max_bucket: int = 256) -> int:
     while b < m:
         b <<= 1
     return min(b, max_bucket)
+
+
+def ensure_engine(engine: Optional["SimulationEngine"], model, fl, *,
+                  algorithm: str,
+                  payload_mode: Optional[str]) -> "SimulationEngine":
+    """Build a fresh engine, or validate a caller-supplied one against the
+    run's (model, algorithm, FLConfig, payload_mode) — shared by the static
+    (``fl/simulation.py``) and mobile (``fl/mobile.py``) drivers."""
+    import dataclasses
+
+    if engine is None:
+        return SimulationEngine(model, fl, algorithm,
+                                payload_mode=payload_mode or "batched")
+    if engine.algorithm != algorithm or engine.model is not model:
+        raise ValueError(
+            f"engine was built for algorithm {engine.algorithm!r} and "
+            f"its own model; cannot run algorithm {algorithm!r} with it")
+    # the engine's compiled payload fns bake in its FLConfig — only the
+    # scheduling-side eta_mode may differ between runs sharing an engine
+    if dataclasses.replace(engine.fl, eta_mode=fl.eta_mode) != fl:
+        raise ValueError("engine.fl differs from cfg.fl beyond eta_mode; "
+                         "build a fresh SimulationEngine for this config")
+    if payload_mode is not None and payload_mode != engine.payload_mode:
+        raise ValueError(
+            f"payload_mode={payload_mode!r} conflicts with the supplied "
+            f"engine's mode {engine.payload_mode!r}")
+    return engine
 
 
 def _shape_signature(batches: Any) -> Tuple:

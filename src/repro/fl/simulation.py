@@ -29,7 +29,6 @@ same randomness.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 from dataclasses import dataclass
 from typing import Any, List, Optional, Tuple
@@ -42,7 +41,7 @@ from repro.core.bandwidth import weighted_equal_rate_allocation
 from repro.core.scheduler import get_policy
 from repro.core.server import SemiSyncServer, ServerConfig
 from repro.data.partition import ClientDataset
-from repro.fl.engine import SimulationEngine
+from repro.fl.engine import SimulationEngine, ensure_engine
 from repro.wireless.channel import EdgeNetwork
 from repro.wireless.timing import compute_time, upload_time, model_bits
 
@@ -62,6 +61,10 @@ class SimResult:
     wait_fraction: float         # mean fraction of time UEs spent idle
     payload_dispatches: int = 0  # device dispatches issued by the engine
     payloads_computed: int = 0   # payloads those dispatches produced
+    # mobile multi-cell extension (zeros on the static single-cell path)
+    n_cells: int = 1
+    handovers: int = 0           # nearest-BS re-associations during the run
+    cloud_rounds: int = 0        # hierarchical cloud merges performed
 
 
 def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
@@ -73,6 +76,17 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
                    verbose: bool = False,
                    payload_mode: Optional[str] = None,  # default: batched
                    engine: Optional[SimulationEngine] = None) -> SimResult:
+    if cfg.mobility.enabled:
+        # mobile multi-cell path (time-varying channels, handovers,
+        # optional cell→cloud hierarchy) — fl/mobile.py; the static path
+        # below stays bitwise untouched when the flag is off
+        from repro.fl.mobile import run_mobile_simulation
+        return run_mobile_simulation(
+            cfg, model, clients, algorithm=algorithm, mode=mode,
+            bandwidth_policy=bandwidth_policy, max_rounds=max_rounds,
+            eval_every=eval_every, eval_clients=eval_clients, seed=seed,
+            name=name, verbose=verbose, payload_mode=payload_mode,
+            engine=engine)
     fl = cfg.fl
     n = len(clients)
     max_rounds = max_rounds or fl.rounds
@@ -99,24 +113,10 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
 
     # --- model / engine -----------------------------------------------------
     params0 = model.init(init_key)
-    z_bits = cfg.wireless.grad_bits or model_bits(params0)
-    if engine is None:
-        engine = SimulationEngine(model, fl, algorithm,
-                                  payload_mode=payload_mode or "batched")
-    else:
-        if engine.algorithm != algorithm or engine.model is not model:
-            raise ValueError(
-                f"engine was built for algorithm {engine.algorithm!r} and "
-                f"its own model; cannot run algorithm {algorithm!r} with it")
-        # the engine's compiled payload fns bake in its FLConfig — only the
-        # scheduling-side eta_mode may differ between runs sharing an engine
-        if dataclasses.replace(engine.fl, eta_mode=fl.eta_mode) != fl:
-            raise ValueError("engine.fl differs from cfg.fl beyond eta_mode; "
-                             "build a fresh SimulationEngine for this config")
-        if payload_mode is not None and payload_mode != engine.payload_mode:
-            raise ValueError(
-                f"payload_mode={payload_mode!r} conflicts with the supplied "
-                f"engine's mode {engine.payload_mode!r}")
+    z_bits = cfg.wireless.grad_bits or model_bits(
+        params0, cfg.wireless.bits_per_param)
+    engine = ensure_engine(engine, model, fl, algorithm=algorithm,
+                           payload_mode=payload_mode)
     # snapshot so SimResult reports THIS run's dispatch counts even when the
     # engine (and its lifetime counters) is shared across a sweep
     disp0, pay0 = engine.dispatches, engine.payloads_computed

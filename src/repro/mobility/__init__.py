@@ -1,0 +1,4 @@
+from repro.mobility.models import (Area, GaussMarkov, MobilityModel,
+                                   RandomWaypoint, StaticMobility,
+                                   get_mobility)
+from repro.mobility.multicell import MultiCellNetwork, cell_layout

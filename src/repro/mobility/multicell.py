@@ -1,0 +1,206 @@
+"""Multi-cell mobile edge network: several BSs, moving UEs, handovers.
+
+Generalises ``wireless.channel.EdgeNetwork`` (one static cell) to a hex-ish
+grid of base stations with UEs that move under a ``MobilityModel`` and
+associate with the nearest BS.  The channel API (``sample_fading`` /
+``channel`` / ``channels`` / ``mean_rates`` / ``distances``) is a drop-in
+superset of ``EdgeNetwork``'s, so ``SchedulingPolicy`` and the Theorem-2/4
+bandwidth allocators work per cell unchanged.
+
+RNG discipline — two independent streams:
+
+* ``rng``      (main, ``default_rng(seed)``): consumed in exactly the order
+  ``EdgeNetwork.drop`` consumes it (distance radii, CPU frequencies, then
+  Rayleigh fading per ``sample_fading``), so a 1-cell static drop is
+  **bitwise identical** to the legacy network for the same seed.
+* ``mob_rng``  (auxiliary): drop angles, multi-cell positions, and all
+  mobility-model draws — extra geometry never perturbs the fading stream.
+
+``advance_to(t)`` integrates mobility in ``step_s``-second ticks, refreshes
+serving-BS association once per advance, and returns the handover events
+``[(ue, src_cell, dst_cell), ...]`` it induced.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.config import WirelessConfig
+from repro.core.bandwidth import UEChannel
+from repro.mobility.models import Area, MobilityModel, get_mobility
+from repro.wireless.channel import make_channel, mean_rates_for
+
+MIN_DIST_M = 5.0        # same floor as EdgeNetwork.drop
+_MOB_STREAM = 0x6D6F62  # "mob" — decorrelates the auxiliary stream
+
+
+def cell_layout(n_cells: int, radius_m: float) -> np.ndarray:
+    """BS coordinates [n_cells, 2] on a hex-ish grid (col pitch √3·R, row
+    pitch 1.5·R, odd rows offset half a column)."""
+    if n_cells < 1:
+        raise ValueError("need at least one cell")
+    col_pitch = np.sqrt(3.0) * radius_m
+    row_pitch = 1.5 * radius_m
+    cols = int(np.ceil(np.sqrt(n_cells)))
+    xy = np.empty((n_cells, 2))
+    for k in range(n_cells):
+        r, c = divmod(k, cols)
+        xy[k, 0] = c * col_pitch + (0.5 * col_pitch if r % 2 else 0.0)
+        xy[k, 1] = r * row_pitch
+    return xy
+
+
+@dataclass
+class MultiCellNetwork:
+    """Time-varying geometry: positions, nearest-BS association, handovers."""
+    cfg: WirelessConfig
+    n_ues: int
+    bs_xy: np.ndarray                 # [n_cells, 2]
+    positions: np.ndarray             # [n_ues, 2]
+    cpu_freq: np.ndarray              # [n_ues] Hz
+    rng: np.random.Generator          # main stream (fading)
+    mob_rng: np.random.Generator      # auxiliary stream (geometry/mobility)
+    mobility: MobilityModel
+    area: Area
+    assoc: np.ndarray                 # [n_ues] serving cell index
+    _dist: np.ndarray                 # [n_ues] distance to serving BS [m]
+    _mob_state: dict = field(default_factory=dict)
+    time: float = 0.0                 # simulated seconds advanced so far
+    handovers: int = 0                # lifetime handover count
+    step_s: float = 1.0               # mobility integration step
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def drop(cls, cfg: WirelessConfig, n_ues: int, *, n_cells: int = 1,
+             seed: int = 0, mobility: str = "static", speed_mps: float = 0.0,
+             pause_s: float = 0.0, gm_alpha: float = 0.85,
+             uniform_distance: bool = False, step_s: float = 1.0
+             ) -> "MultiCellNetwork":
+        if step_s <= 0.0:
+            raise ValueError(f"step_s must be positive, got {step_s}")
+        rng = np.random.default_rng(seed)
+        mob_rng = np.random.default_rng([seed, _MOB_STREAM])
+        bs_xy = cell_layout(n_cells, cfg.cell_radius_m)
+        r_cell = cfg.cell_radius_m
+        area = Area(float(bs_xy[:, 0].min() - r_cell),
+                    float(bs_xy[:, 1].min() - r_cell),
+                    float(bs_xy[:, 0].max() + r_cell),
+                    float(bs_xy[:, 1].max() + r_cell))
+
+        if n_cells == 1:
+            # main-stream consumption mirrors EdgeNetwork.drop exactly; the
+            # polar angle comes from the auxiliary stream so fading draws
+            # that follow are unperturbed
+            if uniform_distance:
+                radii = np.full(n_ues, r_cell / 2.0)
+            else:
+                radii = np.maximum(
+                    r_cell * np.sqrt(rng.uniform(size=n_ues)), MIN_DIST_M)
+            theta = mob_rng.uniform(0.0, 2.0 * np.pi, size=n_ues)
+            positions = bs_xy[0] + radii[:, None] * np.stack(
+                [np.cos(theta), np.sin(theta)], axis=1)
+            dist0 = radii                  # exact (no norm round-trip)
+            assoc = np.zeros(n_ues, dtype=np.int64)
+        elif uniform_distance:
+            # equal-η ablation in a multi-cell drop: ring of radius R/2
+            # around an auxiliary-stream home cell
+            home = mob_rng.integers(0, n_cells, size=n_ues)
+            theta = mob_rng.uniform(0.0, 2.0 * np.pi, size=n_ues)
+            positions = bs_xy[home] + (r_cell / 2.0) * np.stack(
+                [np.cos(theta), np.sin(theta)], axis=1)
+            assoc, dist0 = _associate(positions, bs_xy)
+        else:
+            positions = area.uniform(mob_rng, n_ues)
+            assoc, dist0 = _associate(positions, bs_xy)
+
+        ratio = max(cfg.cpu_hetero, 1.0)
+        cpu = cfg.cpu_freq_hz * np.exp(
+            rng.uniform(np.log(1.0 / ratio), 0.0, size=n_ues))
+
+        model = get_mobility(mobility, speed_mps=speed_mps, pause_s=pause_s,
+                             gm_alpha=gm_alpha)
+        net = cls(cfg=cfg, n_ues=n_ues, bs_xy=bs_xy, positions=positions,
+                  cpu_freq=cpu, rng=rng, mob_rng=mob_rng, mobility=model,
+                  area=area, assoc=assoc, _dist=dist0, step_s=step_s)
+        net._mob_state = model.init_state(n_ues, area, mob_rng)
+        return net
+
+    # ------------------------------------------------------------------
+    # channel API (EdgeNetwork-compatible)
+    # ------------------------------------------------------------------
+    @property
+    def n_cells(self) -> int:
+        return len(self.bs_xy)
+
+    @property
+    def distances(self) -> np.ndarray:
+        """Distance to the *serving* BS per UE [m]."""
+        return self._dist
+
+    def sample_fading(self) -> np.ndarray:
+        """Rayleigh small-scale coefficients for one round (main stream —
+        the same draw ``EdgeNetwork.sample_fading`` makes)."""
+        return self.rng.rayleigh(scale=self.cfg.rayleigh_scale,
+                                 size=self.n_ues)
+
+    def channel(self, ue: int, h: Optional[float] = None) -> UEChannel:
+        hval = float(h) if h is not None else float(self.sample_fading()[ue])
+        return make_channel(self.cfg, self._dist[ue], hval)
+
+    def channels(self, h: Optional[np.ndarray] = None) -> list:
+        h = h if h is not None else self.sample_fading()
+        return [self.channel(i, h[i]) for i in range(self.n_ues)]
+
+    def mean_rates(self, bandwidth_per_ue: Optional[float] = None
+                   ) -> np.ndarray:
+        """Expected uplink rate at equal-split bandwidth (policy input)."""
+        return mean_rates_for(self.cfg, self._dist, bandwidth_per_ue)
+
+    # ------------------------------------------------------------------
+    # cells
+    # ------------------------------------------------------------------
+    def cell_members(self, c: int) -> np.ndarray:
+        return np.nonzero(self.assoc == c)[0]
+
+    def cell_counts(self) -> np.ndarray:
+        return np.bincount(self.assoc, minlength=self.n_cells)
+
+    # ------------------------------------------------------------------
+    # time
+    # ------------------------------------------------------------------
+    def advance_to(self, t: float) -> List[Tuple[int, int, int]]:
+        """Advance mobility to simulated time ``t``; re-associate and return
+        the handover events ``[(ue, src, dst), ...]`` this advance caused.
+
+        Static mobility (or a zero/negative time step) is a pure clock
+        update — positions, distances and association stay exactly as
+        dropped, which is what keeps the degenerate configuration bitwise
+        identical to the legacy single-cell path.
+        """
+        if t <= self.time or self.mobility.is_static:
+            self.time = max(self.time, t)
+            return []
+        while self.time < t - 1e-9:
+            dt = min(self.step_s, t - self.time)
+            self.positions, self._mob_state = self.mobility.step(
+                self.positions, self._mob_state, dt, self.area, self.mob_rng)
+            self.time += dt
+        new_assoc, self._dist = _associate(self.positions, self.bs_xy)
+        moved = np.nonzero(new_assoc != self.assoc)[0]
+        events = [(int(u), int(self.assoc[u]), int(new_assoc[u]))
+                  for u in moved]
+        self.handovers += len(events)
+        self.assoc = new_assoc
+        return events
+
+
+def _associate(positions: np.ndarray, bs_xy: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Nearest-BS association: [n] cell ids + [n] serving distances."""
+    d2 = ((positions[:, None, :] - bs_xy[None, :, :]) ** 2).sum(-1)
+    assoc = d2.argmin(axis=1).astype(np.int64)
+    dist = np.maximum(np.sqrt(d2[np.arange(len(positions)), assoc]),
+                      MIN_DIST_M)
+    return assoc, dist

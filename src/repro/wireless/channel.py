@@ -19,6 +19,28 @@ def _noise_w_per_hz(n0_dbm_per_hz: float) -> float:
     return 10.0 ** (n0_dbm_per_hz / 10.0) / 1000.0
 
 
+def make_channel(cfg: WirelessConfig, dist: float, h: float) -> UEChannel:
+    """One UE's channel snapshot from config + geometry + fading — the one
+    place Table-I parameters turn into a ``UEChannel`` (shared by the
+    static ``EdgeNetwork`` and the mobile ``MultiCellNetwork``)."""
+    return UEChannel(p=cfg.tx_power_w, h=float(h), dist=float(dist),
+                     kappa=cfg.path_loss_exp,
+                     n0=_noise_w_per_hz(cfg.noise_dbm_per_hz))
+
+
+def mean_rates_for(cfg: WirelessConfig, distances: np.ndarray,
+                   bandwidth_per_ue: Optional[float] = None) -> np.ndarray:
+    """Expected uplink rate per UE at mean fading and equal-split bandwidth
+    (the Sec. VI-A-4 η-derivation input)."""
+    from repro.core.bandwidth import uplink_rate
+    n = len(distances)
+    b = bandwidth_per_ue or cfg.total_bandwidth_hz / n
+    h_mean = cfg.rayleigh_scale * np.sqrt(np.pi / 2.0)
+    return np.array([
+        float(uplink_rate(b, make_channel(cfg, distances[i], h_mean)))
+        for i in range(n)])
+
+
 @dataclass
 class EdgeNetwork:
     """A drop of n UEs in the cell: static geometry + per-UE compute speeds."""
@@ -53,12 +75,8 @@ class EdgeNetwork:
                                  size=self.n_ues)
 
     def channel(self, ue: int, h: Optional[float] = None) -> UEChannel:
-        cfg = self.cfg
         hval = float(h) if h is not None else float(self.sample_fading()[ue])
-        return UEChannel(p=cfg.tx_power_w, h=hval,
-                         dist=float(self.distances[ue]),
-                         kappa=cfg.path_loss_exp,
-                         n0=_noise_w_per_hz(cfg.noise_dbm_per_hz))
+        return make_channel(self.cfg, self.distances[ue], hval)
 
     def channels(self, h: Optional[np.ndarray] = None) -> list:
         h = h if h is not None else self.sample_fading()
@@ -68,12 +86,7 @@ class EdgeNetwork:
                    ) -> np.ndarray:
         """Expected uplink rate per UE at equal-split bandwidth (used to
         derive distance-based η in Sec. VI-A-4)."""
-        from repro.core.bandwidth import uplink_rate
-        b = bandwidth_per_ue or self.cfg.total_bandwidth_hz / self.n_ues
-        h_mean = self.cfg.rayleigh_scale * np.sqrt(np.pi / 2.0)
-        return np.array([
-            float(uplink_rate(b, self.channel(i, h_mean)))
-            for i in range(self.n_ues)])
+        return mean_rates_for(self.cfg, self.distances, bandwidth_per_ue)
 
 
 def sample_channels(cfg: WirelessConfig, n_ues: int, seed: int = 0):

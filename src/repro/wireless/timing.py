@@ -6,6 +6,7 @@
 """
 from __future__ import annotations
 
+import jax
 import numpy as np
 
 from repro.core.bandwidth import UEChannel, uplink_rate
@@ -27,11 +28,18 @@ def upload_time(z_bits: float, bandwidth_hz: float, ch: UEChannel) -> float:
 
 
 def round_time(times: np.ndarray) -> float:
-    """T_k = max_{i∈A_k} T_k^i."""
+    """T_k = max_{i∈A_k} T_k^i.  An empty scheduled set (a hierarchical
+    cell with no arrivals this round) takes no time, rather than letting
+    ``np.max([])`` raise a bare ValueError."""
+    times = np.asarray(times)
+    if times.size == 0:
+        return 0.0
     return float(np.max(times))
 
 
 def model_bits(params, bits_per_param: int = 32) -> float:
-    """Z — payload size for one gradient upload."""
-    import jax
+    """Z — payload size for one gradient upload (16 = fp16 uploads)."""
+    if bits_per_param <= 0:
+        raise ValueError(f"bits_per_param must be positive, "
+                         f"got {bits_per_param}")
     return float(sum(x.size for x in jax.tree.leaves(params))) * bits_per_param

@@ -1,0 +1,331 @@
+"""Mobility subsystem: models, multi-cell network, hierarchy, sim parity."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import (ExperimentConfig, FLConfig, MobilityConfig,
+                          WirelessConfig)
+from repro.configs import get_config
+from repro.core.hierarchy import (NON_MEMBER, HierarchicalServer,
+                                  HierarchyConfig)
+from repro.core.server import ServerConfig
+from repro.data import partition_noniid, synthetic_mnist
+from repro.fl.simulation import run_simulation
+from repro.mobility.models import (Area, GaussMarkov, RandomWaypoint,
+                                   StaticMobility, get_mobility)
+from repro.mobility.multicell import MultiCellNetwork, cell_layout
+from repro.models import build_model
+from repro.wireless.channel import EdgeNetwork
+
+AREA = Area(0.0, 0.0, 400.0, 400.0)
+
+
+# ---------------------------------------------------------------------------
+# mobility models
+# ---------------------------------------------------------------------------
+
+def _roll(model, n=64, steps=50, dt=1.0, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = AREA.uniform(rng, n)
+    state = model.init_state(n, AREA, rng)
+    traj = [pos]
+    for _ in range(steps):
+        pos, state = model.step(pos, state, dt, AREA, rng)
+        traj.append(pos)
+    return np.stack(traj)
+
+
+def test_static_mobility_never_moves():
+    traj = _roll(StaticMobility())
+    assert np.array_equal(traj[0], traj[-1])
+
+
+@pytest.mark.parametrize("model", [RandomWaypoint(speed_mps=10.0),
+                                   GaussMarkov(speed_mps=10.0)])
+def test_models_move_and_stay_in_area(model):
+    traj = _roll(model)
+    assert not np.allclose(traj[0], traj[-1])
+    assert AREA.contains(traj.reshape(-1, 2)).all()
+
+
+def test_random_waypoint_respects_speed_bound():
+    model = RandomWaypoint(speed_mps=10.0)
+    traj = _roll(model, dt=1.0)
+    step_len = np.linalg.norm(np.diff(traj, axis=0), axis=-1)
+    # per-leg speed is U[0.5, 1.5]·v̄
+    assert step_len.max() <= 1.5 * 10.0 + 1e-9
+
+
+def test_mobility_deterministic_per_seed():
+    a = _roll(RandomWaypoint(speed_mps=5.0), seed=7)
+    b = _roll(RandomWaypoint(speed_mps=5.0), seed=7)
+    c = _roll(RandomWaypoint(speed_mps=5.0), seed=8)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_get_mobility_factory():
+    assert isinstance(get_mobility("random_waypoint", speed_mps=0.0),
+                      StaticMobility)
+    assert isinstance(get_mobility("random_waypoint", speed_mps=2.0),
+                      RandomWaypoint)
+    assert isinstance(get_mobility("gauss_markov", speed_mps=2.0),
+                      GaussMarkov)
+    with pytest.raises(ValueError):
+        get_mobility("teleport", speed_mps=2.0)
+
+
+# ---------------------------------------------------------------------------
+# multi-cell network
+# ---------------------------------------------------------------------------
+
+def test_cell_layout_distinct_positions():
+    xy = cell_layout(7, 200.0)
+    assert xy.shape == (7, 2)
+    d = np.linalg.norm(xy[:, None] - xy[None, :], axis=-1)
+    assert (d[~np.eye(7, dtype=bool)] > 200.0).all()
+
+
+def test_single_cell_drop_matches_edge_network_bitwise():
+    """The 1-cell static drop consumes the main RNG stream exactly as
+    EdgeNetwork.drop — distances, CPU freqs, and the fading stream must be
+    bitwise identical."""
+    cfg = WirelessConfig()
+    legacy = EdgeNetwork.drop(cfg, 16, seed=3)
+    net = MultiCellNetwork.drop(cfg, 16, n_cells=1, seed=3)
+    np.testing.assert_array_equal(legacy.distances, net.distances)
+    np.testing.assert_array_equal(legacy.cpu_freq, net.cpu_freq)
+    np.testing.assert_array_equal(legacy.sample_fading(), net.sample_fading())
+
+
+def test_nearest_bs_association():
+    net = MultiCellNetwork.drop(WirelessConfig(), 64, n_cells=4, seed=0)
+    d = np.linalg.norm(net.positions[:, None] - net.bs_xy[None], axis=-1)
+    np.testing.assert_array_equal(net.assoc, d.argmin(1))
+    assert net.cell_counts().sum() == 64
+
+
+def test_advance_counts_handovers_and_moves_ues():
+    net = MultiCellNetwork.drop(WirelessConfig(), 128, n_cells=4, seed=0,
+                                mobility="random_waypoint", speed_mps=50.0)
+    p0 = net.positions.copy()
+    events = []
+    for t in range(1, 31):
+        events += net.advance_to(float(t * 10))
+    assert not np.allclose(p0, net.positions)
+    assert net.handovers == len(events) and net.handovers >= 1
+    for (ue, src, dst) in events:
+        assert src != dst and 0 <= ue < 128
+    # association stays nearest-BS after movement
+    d = np.linalg.norm(net.positions[:, None] - net.bs_xy[None], axis=-1)
+    np.testing.assert_array_equal(net.assoc, d.argmin(1))
+
+
+def test_static_advance_is_pure_clock_update():
+    net = MultiCellNetwork.drop(WirelessConfig(), 16, n_cells=2, seed=0)
+    d0, a0 = net.distances.copy(), net.assoc.copy()
+    assert net.advance_to(1e6) == []
+    np.testing.assert_array_equal(net.distances, d0)
+    np.testing.assert_array_equal(net.assoc, a0)
+    assert net.time == 1e6
+
+
+# ---------------------------------------------------------------------------
+# hierarchical cell → cloud aggregation
+# ---------------------------------------------------------------------------
+
+def _hier(n=8, n_cells=2, a=1, every=2):
+    params = {"w": jnp.arange(4.0)}
+    cfgs = [ServerConfig(n_ues=n, participants_per_round=a,
+                         staleness_bound=3, beta=0.1) for _ in range(n_cells)]
+    members = [np.arange(n // 2), np.arange(n // 2, n)]
+    return HierarchicalServer(params, cfgs,
+                              HierarchyConfig(n_cells=n_cells,
+                                              cloud_sync_every=every),
+                              members)
+
+
+def test_cloud_merge_is_weighted_mean():
+    h = _hier()
+    h.cells[0].params = {"w": jnp.full(4, 1.0)}
+    h.cells[1].params = {"w": jnp.full(4, 4.0)}
+    h._arrivals_since_sync[:] = [3, 1]
+    h.cloud_sync()
+    np.testing.assert_allclose(np.asarray(h.cloud_params["w"]),
+                               (3 * 1.0 + 1 * 4.0) / 4.0, rtol=1e-6)
+    for srv in h.cells:
+        np.testing.assert_allclose(np.asarray(srv.params["w"]),
+                                   np.asarray(h.cloud_params["w"]))
+    assert h.cloud_rounds == 1 and h._arrivals_since_sync.sum() == 0
+
+
+def test_rounds_and_cloud_cadence():
+    h = _hier(every=2)
+    grad = {"w": jnp.ones(4)}
+    r1 = h.on_arrival(0, 0, grad)
+    assert r1 is not None and r1["round"] == 1 and not r1["cloud_synced"]
+    r2 = h.on_arrival(1, 5, grad)
+    assert r2["round"] == 2 and r2["cloud_synced"]
+    assert h.cloud_rounds == 1 and h.edge_rounds == 2
+    assert h.pi_matrix().shape == (2, 8)
+
+
+def test_handover_carries_staleness():
+    h = _hier(every=0)
+    grad = {"w": jnp.ones(4)}
+    # cell 1 completes 4 rounds; UE 0 (cell 0) never participates
+    for _ in range(4):
+        h.on_arrival(1, 5, grad)
+    assert h.cells[0].staleness(0) == 0
+    h.handover(0, 0, 1)
+    assert h.cells[0].ue_version[0] == NON_MEMBER
+    # fresh in its old cell ⇒ fresh in the new cell's clock
+    assert h.cells[1].staleness(0) == 0
+    # a stale UE keeps its staleness across the boundary
+    h.cells[1].ue_version[6] = 1          # τ = 4 − 1 = 3 in cell 1
+    h.handover(6, 1, 0)
+    assert h.cells[0].staleness(6) == 3
+
+
+def test_arrival_after_handover_does_not_resurrect_membership():
+    """A UE whose upload is pending at cell 0 when it hands over to cell 1
+    must not be re-adopted (or pushed to) by cell 0 when its round closes."""
+    h = _hier(a=2, every=0)
+    grad = {"w": jnp.ones(4)}
+    assert h.on_arrival(0, 1, grad) is None       # pending in cell 0
+    h.handover(1, 0, 1)                            # leaves mid-flight
+    res = h.on_arrival(0, 2, grad)                 # closes cell 0's round
+    assert res is not None
+    assert 1 not in res["distribute"]
+    assert h.cells[0].ue_version[1] == NON_MEMBER
+    assert h.member_cell[1] == 1
+
+
+def test_late_delivery_from_departed_ue_has_sane_staleness():
+    """An upload delivered to the old cell *after* the handover bookkeeping
+    ran must get a finite staleness (λ^τ weighting would overflow on the
+    sentinel) and leave membership untouched."""
+    params = {"w": jnp.zeros(4)}
+    cfgs = [ServerConfig(n_ues=8, participants_per_round=1,
+                         staleness_bound=3, beta=0.1,
+                         staleness_discount=0.5) for _ in range(2)]
+    h = HierarchicalServer(params, cfgs,
+                           HierarchyConfig(n_cells=2, cloud_sync_every=0),
+                           [np.arange(4), np.arange(4, 8)])
+    h.handover(1, 0, 1)
+    res = h.on_arrival(0, 1, {"w": jnp.ones(4)})   # late delivery to cell 0
+    assert res is not None and 1 not in res["distribute"]
+    assert h.cells[0].ue_version[1] == NON_MEMBER
+    tau = h.cells[0].history_staleness[-1]
+    assert np.isfinite(np.asarray(res["params"]["w"])).all()
+    assert abs(int(tau[1])) < 100                  # sane, not ±2^60
+
+
+def test_non_members_never_force_refreshed():
+    h = _hier(every=0)
+    grad = {"w": jnp.ones(4)}
+    for _ in range(6):                     # staleness bound is 3
+        res = h.on_arrival(1, 5, grad)
+    # distribute never includes cell-0 members (sentinel version)
+    assert all(i >= 4 for i in res["distribute"])
+
+
+# ---------------------------------------------------------------------------
+# simulation parity + mobile runs
+# ---------------------------------------------------------------------------
+
+_DATA = synthetic_mnist(n=1200, seed=21)
+_MODEL = build_model(get_config("mnist_dnn"))
+
+
+def _cfg(n=8, a=3, s=3, **fl_kw):
+    return ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        fl=FLConfig(n_ues=n, participants_per_round=a, staleness_bound=s,
+                    alpha=0.03, beta=0.07, inner_batch=8, outer_batch=8,
+                    hessian_batch=8, **fl_kw))
+
+
+def _clients(n=8, seed=0):
+    return partition_noniid(_DATA, n, l=4, seed=seed)
+
+
+def test_degenerate_mobile_is_bitwise_identical_to_static():
+    """speed 0, one cell, hierarchy off ⇒ the mobile driver reproduces the
+    legacy single-cell trajectory bitwise (same seed)."""
+    base = _cfg()
+    kw = dict(algorithm="perfed", mode="semi", max_rounds=6, eval_every=2,
+              seed=0)
+    r_static = run_simulation(base, _MODEL, _clients(), **kw)
+    degen = dataclasses.replace(base, mobility=MobilityConfig(
+        enabled=True, speed_mps=0.0, n_cells=1, hierarchy=False))
+    r_mob = run_simulation(degen, _MODEL, _clients(), **kw)
+    np.testing.assert_array_equal(r_static.losses, r_mob.losses)
+    np.testing.assert_array_equal(r_static.global_losses, r_mob.global_losses)
+    np.testing.assert_array_equal(r_static.times, r_mob.times)
+    np.testing.assert_array_equal(r_static.pi, r_mob.pi)
+    assert r_mob.handovers == 0 and r_mob.cloud_rounds == 0
+    assert r_mob.payload_dispatches == r_static.payload_dispatches
+
+
+def test_degenerate_equal_bandwidth_and_eta_modes_match_too():
+    base = _cfg(n=6, a=2, s=2)
+    base = dataclasses.replace(
+        base, fl=dataclasses.replace(base.fl, eta_mode="distance"))
+    kw = dict(algorithm="fedavg", mode="semi", max_rounds=4, eval_every=2,
+              seed=4, bandwidth_policy="equal")
+    r_static = run_simulation(base, _MODEL, _clients(6, seed=4), **kw)
+    degen = dataclasses.replace(base, mobility=MobilityConfig(
+        enabled=True, speed_mps=0.0, n_cells=1))
+    r_mob = run_simulation(degen, _MODEL, _clients(6, seed=4), **kw)
+    np.testing.assert_array_equal(r_static.losses, r_mob.losses)
+    np.testing.assert_array_equal(r_static.times, r_mob.times)
+
+
+def test_mobile_multicell_hierarchy_run():
+    n = 24
+    cfg = dataclasses.replace(
+        _cfg(n=n, a=6, s=4, first_order=True),
+        mobility=MobilityConfig(enabled=True, model="random_waypoint",
+                                speed_mps=40.0, n_cells=3, hierarchy=True,
+                                cloud_sync_every=3))
+    res = run_simulation(cfg, _MODEL, _clients(n), algorithm="perfed",
+                         mode="semi", bandwidth_policy="equal",
+                         max_rounds=9, eval_every=3, seed=0)
+    assert res.n_cells == 3
+    assert res.rounds[-1] == 9
+    assert res.cloud_rounds == 3          # every 3 of 9 edge rounds
+    assert res.pi.shape[0] == 9
+    assert np.isfinite(res.losses).all()
+    assert res.total_time > 0
+
+
+def test_mobile_multicell_flat_server_run():
+    """Multi-cell without hierarchy: one global server, per-cell bandwidth."""
+    n = 16
+    cfg = dataclasses.replace(
+        _cfg(n=n, a=4, s=3, first_order=True),
+        mobility=MobilityConfig(enabled=True, model="gauss_markov",
+                                speed_mps=30.0, n_cells=4, hierarchy=False))
+    res = run_simulation(cfg, _MODEL, _clients(n), algorithm="perfed",
+                         mode="semi", bandwidth_policy="equal",
+                         max_rounds=5, eval_every=0, seed=2)
+    assert res.n_cells == 4 and res.cloud_rounds == 0
+    assert res.pi.shape[0] == 5
+
+
+def test_mobile_same_seed_reproducible():
+    n = 16
+    cfg = dataclasses.replace(
+        _cfg(n=n, a=4, s=3, first_order=True),
+        mobility=MobilityConfig(enabled=True, speed_mps=25.0, n_cells=2,
+                                hierarchy=True, cloud_sync_every=2))
+    kw = dict(algorithm="perfed", mode="semi", bandwidth_policy="equal",
+              max_rounds=6, eval_every=3, seed=5)
+    a = run_simulation(cfg, _MODEL, _clients(n, seed=5), **kw)
+    b = run_simulation(cfg, _MODEL, _clients(n, seed=5), **kw)
+    np.testing.assert_array_equal(a.losses, b.losses)
+    np.testing.assert_array_equal(a.pi, b.pi)
+    assert a.handovers == b.handovers

@@ -1,9 +1,16 @@
 """Wireless model — Eq. (9)–(12) properties."""
+import dataclasses
+
 import numpy as np
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # clean container
+    from repro.utils.hypofallback import given, settings, strategies as st
+
 from repro.config import WirelessConfig
-from repro.core.bandwidth import uplink_rate
+from repro.core.bandwidth import UEChannel, uplink_rate
 from repro.wireless.channel import EdgeNetwork
 from repro.wireless.timing import compute_time, model_bits, round_time, upload_time
 
@@ -45,13 +52,85 @@ def test_round_time_is_max():
     assert round_time(np.array([0.3, 1.2, 0.7])) == pytest.approx(1.2)
 
 
+def test_round_time_empty_schedule_is_zero():
+    """An empty scheduled set (e.g. an idle hierarchical cell) costs no
+    time instead of raising a bare ValueError from np.max([])."""
+    assert round_time(np.array([])) == 0.0
+    assert round_time([]) == 0.0
+
+
 def test_model_bits():
     import jax.numpy as jnp
     params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((5,))}
     assert model_bits(params) == 105 * 32
 
 
+def test_model_bits_16_bit_payloads():
+    import jax.numpy as jnp
+    params = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((5,))}
+    assert model_bits(params, bits_per_param=16) == 105 * 16
+    assert model_bits(params, 16) == model_bits(params) / 2
+    with pytest.raises(ValueError):
+        model_bits(params, bits_per_param=0)
+
+
+def test_bits_per_param_halves_simulated_upload_time():
+    """fp16 payloads plumb end-to-end: the simulator's z_bits derivation
+    honours WirelessConfig.bits_per_param, halving Eq.-10 upload time."""
+    import jax.numpy as jnp
+    params = {"w": jnp.zeros((64, 64))}
+    cfg32 = WirelessConfig()
+    cfg16 = dataclasses.replace(cfg32, bits_per_param=16)
+    z32 = cfg32.grad_bits or model_bits(params, cfg32.bits_per_param)
+    z16 = cfg16.grad_bits or model_bits(params, cfg16.bits_per_param)
+    assert z16 == z32 / 2
+    ch = UEChannel(p=0.01, h=40.0, dist=100.0, kappa=3.8, n0=3.98e-21)
+    assert upload_time(z16, 5e4, ch) == pytest.approx(
+        upload_time(z32, 5e4, ch) / 2)
+
+
 def test_uniform_distance_mode():
     net_u = EdgeNetwork.drop(WirelessConfig(), 6, seed=1,
                              uniform_distance=True)
     assert np.allclose(net_u.distances, net_u.distances[0])
+
+
+# ---------------------------------------------------------------------------
+# channel physics — property tests
+# ---------------------------------------------------------------------------
+
+def _channel(dist: float, h: float = 40.0) -> UEChannel:
+    from repro.wireless.channel import make_channel
+    return make_channel(WirelessConfig(), dist, h)
+
+
+@settings(max_examples=30, deadline=None)
+@given(b_lo=st.floats(min_value=1e3, max_value=5e5),
+       scale=st.floats(min_value=1.01, max_value=10.0),
+       dist=st.floats(min_value=5.0, max_value=200.0))
+def test_uplink_rate_monotone_in_bandwidth(b_lo, scale, dist):
+    """Eq. 9: r(b) = b·ln(1 + q/b) is strictly increasing in b (the fact
+    Theorem 2's equal-finish argument rests on)."""
+    ch = _channel(dist)
+    assert uplink_rate(b_lo * scale, ch) > uplink_rate(b_lo, ch)
+
+
+@settings(max_examples=30, deadline=None)
+@given(d_lo=st.floats(min_value=5.0, max_value=150.0),
+       scale=st.floats(min_value=1.01, max_value=5.0),
+       b=st.floats(min_value=1e3, max_value=1e6))
+def test_uplink_rate_decreasing_in_distance(d_lo, scale, b):
+    """Path loss d^{−κ}: farther UEs upload strictly slower at any b."""
+    assert uplink_rate(b, _channel(d_lo * scale)) < \
+        uplink_rate(b, _channel(d_lo))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_sample_fading_deterministic_per_seed(seed):
+    a = EdgeNetwork.drop(WirelessConfig(), 9, seed=seed)
+    b = EdgeNetwork.drop(WirelessConfig(), 9, seed=seed)
+    for _ in range(3):                     # the whole stream, not just draw 1
+        np.testing.assert_array_equal(a.sample_fading(), b.sample_fading())
+    c = EdgeNetwork.drop(WirelessConfig(), 9, seed=seed + 1)
+    assert not np.array_equal(a.sample_fading(), c.sample_fading())
