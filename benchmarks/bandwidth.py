@@ -28,8 +28,10 @@ def run() -> None:
         return max(tcmp[i] + z[i] * np.log(2) / uplink_rate(b[i], chans[i])
                    for i in range(10))
 
-    (b_opt, t_star), us_opt = timed(
+    alloc, us_opt = timed(
         lambda: equal_finish_allocation(z, tcmp, chans, b_total))
+    b_opt = alloc.b
+    assert alloc.converged, "Theorem-2 bisection did not converge"
     emit("thm2/equal_finish", us_opt, f"round_T={round_time(b_opt):.4f}s")
 
     b_eq = np.full(10, b_total / 10)

@@ -1,0 +1,119 @@
+"""Requeue cost: legacy per-UE scalar pricing vs the driver's batched path.
+
+Every time the server distributes a new model, the event loop prices one
+new compute+upload cycle per requeued UE.  The pre-unification drivers did
+this per UE: ``sample_fading()`` draws the whole ``[n]`` Rayleigh vector
+(to use ONE element), then a ``UEChannel`` and python-scalar Eq. (10)–(11)
+math — per UE per requeue.  The unified driver (``fl/driver.py``) prices a
+requeue of k UEs with one ``[k, n]`` RNG draw and vectorized timing math.
+Both paths are **bitwise identical** (asserted below, and pinned by
+``tests/test_driver.py``); this benchmark measures the overhead win at
+1024 UEs across requeue sizes.
+
+    PYTHONPATH=src python -m benchmarks.requeue            # full sweep
+    PYTHONPATH=src python -m benchmarks.requeue --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):          # run as a script, not -m
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+import numpy as np
+
+from benchmarks.common import emit
+
+N_UES = 1024
+REQUEUE_SIZES = (8, 64, 256)
+REPEATS = 50
+OUT_JSON = "BENCH_requeue.json"
+
+SMOKE_N_UES = 256
+SMOKE_REQUEUE_SIZES = (16,)
+SMOKE_REPEATS = 5
+
+
+class PricingShim:
+    """Minimal TopologyAdapter surface for ``make_cycle_duration_fn``
+    (shared with ``tests/test_driver.py``)."""
+
+    def __init__(self, net, bw):
+        self.net, self.bw = net, bw
+
+    def pre_requeue(self, ues):
+        pass
+
+
+def legacy_durations(net, wl, bw, d_i, z_bits, ues):
+    """Exactly the pre-unification per-UE pricing loop — the reference the
+    batched path is benchmarked against here and pinned bitwise against in
+    ``tests/test_driver.py`` (one copy, imported from both)."""
+    from repro.wireless.timing import compute_time, upload_time
+
+    out = []
+    for i in ues:
+        h = float(net.sample_fading()[i])
+        tcmp = compute_time(wl.cpu_cycles_per_sample, int(d_i[i]),
+                            float(net.cpu_freq[i]))
+        tcom = upload_time(z_bits, float(bw[i]), net.channel(i, h))
+        out.append(tcmp + tcom)
+    return np.array(out)
+
+
+def run(smoke: bool = False) -> None:
+    from repro.config import WirelessConfig
+    from repro.fl.driver import make_cycle_duration_fn
+    from repro.wireless.channel import EdgeNetwork
+
+    n_ues = SMOKE_N_UES if smoke else N_UES
+    sizes = SMOKE_REQUEUE_SIZES if smoke else REQUEUE_SIZES
+    repeats = SMOKE_REPEATS if smoke else REPEATS
+
+    wl = WirelessConfig()
+    bw = np.full(n_ues, wl.total_bandwidth_hz / n_ues)
+    d_i = np.full(n_ues, 48)
+    z_bits = 1e6                       # ~31k fp32 params, order of mnist_dnn
+    results = {"n_ues": n_ues, "repeats": repeats, "smoke": smoke,
+               "sweep": []}
+    rng = np.random.default_rng(0)
+
+    for k in sizes:
+        ues = rng.choice(n_ues, size=k, replace=False)
+        # twin networks with identical seeds → identical RNG streams, so the
+        # two paths can be timed AND checked bitwise against each other
+        net_l = EdgeNetwork.drop(wl, n_ues, seed=1)
+        net_b = EdgeNetwork.drop(wl, n_ues, seed=1)
+        batched_fn = make_cycle_duration_fn(PricingShim(net_b, bw), wl,
+                                            z_bits, d_i)
+
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            want = legacy_durations(net_l, wl, bw, d_i, z_bits, ues)
+        legacy_us = (time.perf_counter() - t0) / repeats * 1e6
+
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            got = batched_fn(ues)
+        batched_us = (time.perf_counter() - t0) / repeats * 1e6
+
+        np.testing.assert_array_equal(got, want)   # bitwise, always
+        speedup = legacy_us / max(batched_us, 1e-9)
+        results["sweep"].append({
+            "requeue_size": int(k), "legacy_us": legacy_us,
+            "batched_us": batched_us, "speedup": speedup})
+        emit(f"requeue/k={k}/n={n_ues}", batched_us,
+             f"legacy_us={legacy_us:.1f};speedup=x{speedup:.1f}")
+
+    out = "BENCH_requeue_smoke.json" if smoke else OUT_JSON
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

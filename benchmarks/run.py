@@ -7,9 +7,15 @@ term, ...).
 
 Run all:      PYTHONPATH=src python -m benchmarks.run
 Run a subset: PYTHONPATH=src python -m benchmarks.run convergence staleness
+CI smoke:     PYTHONPATH=src python -m benchmarks.run --smoke [suite ...]
+
+``--smoke`` passes ``smoke=True`` to every selected suite whose ``run``
+accepts it (reduced sizes, separate ``*_smoke.json`` artifacts) and skips
+suites that have no smoke mode, so the default selection stays CI-sized.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import traceback
 
@@ -24,19 +30,37 @@ SUITES = [
     "kernels",           # Pallas kernels vs oracles
     "engine_throughput", # batched vs sequential simulation engine
     "mobility",          # mobile multi-cell: speed × cells at 1024 UEs
+    "requeue",           # batched vs legacy per-UE requeue pricing
     "roofline",          # §Roofline — from dry-run artifacts
 ]
 
 
 def main() -> None:
-    which = sys.argv[1:] or SUITES
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    unknown = [a for a in args if a.startswith("-") and a != "--smoke"]
+    if unknown:
+        sys.exit(f"unknown flag(s) {unknown}; known: ['--smoke']")
+    named = [a for a in args if not a.startswith("-")]
+    which = named or SUITES
     header = "name,us_per_call,derived"
     print(header, flush=True)
     failures = []
     for suite in which:
         try:
             mod = __import__(f"benchmarks.{suite}", fromlist=["run"])
-            mod.run()
+            if smoke:
+                if "smoke" not in inspect.signature(mod.run).parameters:
+                    if named:
+                        # an explicitly requested suite must not silently
+                        # skip — a green CI gate that runs nothing rots
+                        raise RuntimeError(
+                            f"suite {suite!r} has no smoke mode")
+                    print(f"# {suite}: no smoke mode, skipped", flush=True)
+                    continue
+                mod.run(smoke=True)
+            else:
+                mod.run()
         except Exception as e:  # noqa: BLE001
             failures.append((suite, e))
             traceback.print_exc()

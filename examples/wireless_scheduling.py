@@ -52,7 +52,9 @@ z = [4e5] * len(sched)
 tcmp = [wcfg.cpu_cycles_per_sample * 48 / net.cpu_freq[int(i)]
         for i in sched]
 
-b_opt, t_star = equal_finish_allocation(z, tcmp, chans, wcfg.total_bandwidth_hz)
+b_opt, t_star, converged = equal_finish_allocation(
+    z, tcmp, chans, wcfg.total_bandwidth_hz)
+assert converged, "Theorem-2 bisection did not converge"
 b_eq = np.full(len(sched), wcfg.total_bandwidth_hz / len(sched))
 
 def round_time(b):

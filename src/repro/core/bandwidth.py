@@ -16,7 +16,7 @@ simulator, not inside jit).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from typing import NamedTuple, Sequence
 
 import numpy as np
 
@@ -113,12 +113,29 @@ def bandwidth_for_time(z_bits: float, t: float, tcmp: float, ch: UEChannel,
 # Theorem 2: equal-finish-time allocation within a round
 # ---------------------------------------------------------------------------
 
+class EqualFinishAllocation(NamedTuple):
+    """Theorem-2 allocation result.
+
+    ``converged`` is False when the bisection exhausted ``max_iter`` without
+    reaching ``tol``, or when the final simplex rescale (Σb = B numerical
+    guard) had to move the allocation materially — in either case the
+    returned ``b`` no longer makes all UEs finish simultaneously at
+    ``t_star``, and callers relying on the equal-finish property (Theorem 2)
+    should widen ``max_iter``/``tol`` instead of trusting ``b`` blindly.
+    The rescale used to happen silently, masking non-convergence.
+    """
+    b: np.ndarray
+    t_star: float
+    converged: bool
+
+
 def equal_finish_allocation(z_bits: Sequence[float], tcmp: Sequence[float],
                             channels: Sequence[UEChannel], total_bw: float,
                             *, tol: float = 1e-9, max_iter: int = 200
-                            ) -> Tuple[np.ndarray, float]:
+                            ) -> EqualFinishAllocation:
     """Split ``total_bw`` among the scheduled UEs so all finish at the same
-    time T* (Theorem 2).  Returns (b[i], T*).
+    time T* (Theorem 2).  Returns ``EqualFinishAllocation(b, t_star,
+    converged)``.
 
     T ↦ Σ_i b_i(T) is strictly decreasing, so bisect on T.
     """
@@ -135,6 +152,7 @@ def equal_finish_allocation(z_bits: Sequence[float], tcmp: Sequence[float],
     hi = max(lo * 2.0, 1e-6)
     while need(hi) > total_bw and hi < 1e12:
         hi *= 2.0
+    met_tol = False
     for _ in range(max_iter):
         mid = 0.5 * (lo + hi)
         if need(mid) > total_bw:
@@ -142,21 +160,32 @@ def equal_finish_allocation(z_bits: Sequence[float], tcmp: Sequence[float],
         else:
             hi = mid
         if hi - lo < tol * max(hi, 1.0):
+            met_tol = True
             break
     t_star = hi
     b = np.array([bandwidth_for_time(z[i], t_star, tc[i], channels[i])
                   for i in range(n)])
-    # numerical guard: scale onto the simplex Σb = B
+    # numerical guard: scale onto the simplex Σb = B — and *say so* when the
+    # scale is material (then b no longer equalises finish times at t_star)
     s = b.sum()
+    rescale_ok = bool(np.isfinite(s) and s > 0
+                      and abs(s - total_bw) <= 1e-6 * total_bw)
     if np.isfinite(s) and s > 0:
         b = b * (total_bw / s)
-    return b, t_star
+    return EqualFinishAllocation(b, t_star, met_tol and rescale_ok)
 
 
 def theorem4_lower_bound(z_bits: float, t_star: float, tcmp: float,
-                         ch: UEChannel, eta_i: float, n_ues: int,
-                         total_bw: float) -> float:
-    """The Γ-form lower bound of Eq. (33) for b_k^i (paper's closed form)."""
+                         ch: UEChannel, eta_i: float) -> float:
+    """The Γ-form lower bound of Eq. (33) for b_k^i (paper's closed form).
+
+    With Γ = Z·N₀/((t*−Tcmp)·p·h·d^{−κ}) = (Z/t_com)/q this is
+    η_i · (−q·Γ / (W₋₁(−Γe^{−Γ}) + Γ)) = η_i · Z / (t_com · −(W+Γ)) —
+    i.e. η_i times the Theorem-4 closed-form bandwidth for rate Z/t_com
+    (``bandwidth_for_rate``; pinned by ``tests/test_bandwidth.py``).  An
+    earlier version multiplied *and divided* by ``total_bw · n_ues``,
+    carrying two dead parameters through the formula.
+    """
     t_com = t_star - tcmp
     if t_com <= 0:
         return float("inf")
@@ -165,8 +194,7 @@ def theorem4_lower_bound(z_bits: float, t_star: float, tcmp: float,
     denom = w + gamma
     if denom >= 0:
         return float("inf")
-    return total_bw * n_ues * eta_i * z_bits / (t_com * (-denom)) \
-        / (total_bw * n_ues)  # normalised: dominant Γ-scaling term
+    return eta_i * z_bits / (t_com * (-denom))
 
 
 def weighted_equal_rate_allocation(eta: Sequence[float],
@@ -197,9 +225,10 @@ def weighted_equal_rate_allocation(eta: Sequence[float],
 
 def optimal_bandwidth(z_bits: Sequence[float], tcmp: Sequence[float],
                       channels: Sequence[UEChannel], total_bw: float,
-                      ) -> Tuple[np.ndarray, float]:
+                      ) -> EqualFinishAllocation:
     """Public entry: Theorem-2 equal-finish allocation for one round's
-    scheduled set; returns (b, round_time)."""
+    scheduled set; returns ``EqualFinishAllocation(b, round_time,
+    converged)``."""
     return equal_finish_allocation(z_bits, tcmp, channels, total_bw)
 
 

@@ -60,6 +60,7 @@ class HierarchicalServer:
         self.cloud_params = params
         self.edge_rounds = 0             # completed rounds across all cells
         self.cloud_rounds = 0            # completed cloud merges
+        self.departed_arrivals = 0       # uploads landing after a handover
         self._arrivals_since_sync = np.zeros(hcfg.n_cells, dtype=np.int64)
         self.history_pi: List[np.ndarray] = []   # edge-round order, all cells
         self.history_cell: List[int] = []
@@ -105,6 +106,7 @@ class HierarchicalServer:
         # staleness for the weighting, without resurrecting membership
         departed = int(self.member_cell[ue]) != c
         if departed:
+            self.departed_arrivals += 1
             srv.ue_version[ue] = self._visiting_version(c, ue)
         res = srv.on_arrival(ue, payload)
         if res is None:
@@ -118,6 +120,7 @@ class HierarchicalServer:
         srv = self.cells[c]
         for u in ues:
             if int(self.member_cell[u]) != c:
+                self.departed_arrivals += 1
                 srv.ue_version[u] = self._visiting_version(c, u)
         return self._finish(c, srv.on_round_batch(ues, aggregate_fn))
 

@@ -46,7 +46,8 @@ class SemiSyncServer:
                   "async": 1}[cfg.mode]
         # version of the global model each UE last received
         self.ue_version = np.zeros(cfg.n_ues, dtype=np.int64)
-        self._pending: List[Tuple[int, Any]] = []
+        # (ue, payload, staleness-at-arrival) per pending upload
+        self._pending: List[Tuple[int, Any, int]] = []
         # bookkeeping for analysis / tests
         self.history_pi: List[np.ndarray] = []       # realised Π rows
         self.history_staleness: List[np.ndarray] = []

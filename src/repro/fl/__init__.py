@@ -1,4 +1,5 @@
 from repro.fl.client import make_payload_fn, personalized_eval, global_eval
 from repro.fl.algorithms import ALGORITHMS, algorithm_name
 from repro.fl.engine import SimulationEngine, bucket_size
+from repro.fl.driver import run_event_loop, TopologyAdapter
 from repro.fl.simulation import run_simulation, SimResult

@@ -1,0 +1,418 @@
+"""Unified event-loop driver for the PerFedS² simulators.
+
+``run_simulation`` (static single cell) and ``run_mobile_simulation``
+(mobile multi-cell) used to be two ~300-line near-copies of the same loop,
+and the divergence produced real bugs: in-flight uploads were credited to a
+UE's *post-handover* cell, making ``HierarchicalServer.on_arrival``'s
+departed-UE path unreachable.  Both entry points are now thin
+configurations of ``run_event_loop``, parameterized by a small
+``TopologyAdapter`` — so the semi-synchronous machinery lives exactly once:
+
+* the priority queue over upload-finish times with epoch-based lazy
+  cancellation (τ > S forced refresh abandons in-flight work, Alg. 1 l. 13);
+* the drain-until-round-closes batching (the server advances only on its
+  (A − pending)-th upload, so no distribution — hence no cancellation and
+  no membership effect on queued events — can precede the drained arrivals;
+  their payloads are all computable NOW, as one engine batch: paper Alg. 1
+  / Eq. 8, the invariant that makes PerFedS² fast to simulate);
+* the fused-vs-bucketed dispatch decision (a whole round matching one
+  cell's ``A`` with a single batch signature takes the engine's
+  one-dispatch-per-version-group ``round_update`` path);
+* ``handle`` / ``evaluate`` / cycle-duration pricing, α_i spreading, RNG
+  discipline (independent init/payload/eval streams, ``fold_in`` per event
+  id / round), and ``SimResult`` assembly.
+
+Arrival routing: every heap event is stamped with the cell that dispatched
+it (the UE's association at *cycle start*).  An upload that was in flight
+during a handover therefore arrives at the cell whose round it was computed
+against — the departed-UE path in ``core/hierarchy.py`` now fires — and the
+drain's per-cell arrival counting can never be skewed by mid-drain
+handovers.
+
+Requeue pricing is batched: a requeue of k UEs draws ONE ``[k, n]`` fading
+matrix (bitwise identical to k sequential ``sample_fading()`` calls) and
+runs Eq. (10)–(11) vectorized over the k lanes, instead of one full-vector
+RNG draw plus python-scalar channel math per UE per requeue
+(``benchmarks/requeue.py`` measures the win at 1024 UEs).  The d^{−κ}
+path-loss factors stay on python-scalar pow so every lane is bitwise
+identical to the legacy per-UE loop (see ``wireless.channel.pathloss_pow``)
+— cached as one full vector while the topology is frozen, priced per
+requeued lane once mobility starts replacing the distances array.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.config import ExperimentConfig
+from repro.data.partition import ClientDataset
+from repro.fl.engine import SimulationEngine, ensure_engine
+from repro.wireless.channel import noise_w_per_hz, pathloss_pow
+from repro.wireless.timing import compute_times, model_bits, upload_times
+
+
+@dataclass
+class SimResult:
+    name: str
+    times: np.ndarray            # wall-clock at each eval point [s]
+    losses: np.ndarray           # personalized (PFL) eval loss
+    global_losses: np.ndarray    # loss of the raw global model
+    accs: np.ndarray             # accuracy if the task defines one (else nan)
+    rounds: np.ndarray           # round index at each eval point
+    total_time: float
+    pi: np.ndarray               # realised schedule matrix
+    eta_target: np.ndarray
+    eta_realised: np.ndarray
+    wait_fraction: float         # mean fraction of time UEs spent idle
+    payload_dispatches: int = 0  # device dispatches issued by the engine
+    payloads_computed: int = 0   # payloads those dispatches produced
+    # mobile multi-cell extension (zeros on the static single-cell path)
+    n_cells: int = 1
+    handovers: int = 0           # nearest-BS re-associations during the run
+    cloud_rounds: int = 0        # hierarchical cloud merges performed
+    departed_arrivals: int = 0   # uploads that arrived after a handover
+
+
+class TopologyAdapter:
+    """What differs between the static and mobile event loops.
+
+    The driver owns the heap, epoch cancellation, drain batching, dispatch
+    decisions, eval cadence, batched requeue pricing, and ``SimResult``
+    assembly; the adapter supplies topology (network geometry, bandwidth,
+    cells) and protocol (the server or server hierarchy).
+
+    Attributes the driver reads:
+
+    ``net``  — ``EdgeNetwork``-compatible channel API (``sample_fading_batch``
+               / ``distances`` / ``cpu_freq``).
+    ``eta``  — participation targets (reported in ``SimResult``).
+    ``bw``   — per-UE bandwidth [Hz]; may be updated **in place** by
+               ``pre_requeue`` (the driver holds the array reference).
+    ``n_protocol_cells`` — number of cells the drain bookkeeping tracks
+               (1 for a single global server, even over many radio cells).
+    """
+
+    net: Any
+    eta: np.ndarray
+    bw: np.ndarray
+    n_protocol_cells: int = 1
+
+    # --- protocol ------------------------------------------------------
+    def make_servers(self, params0: Any) -> None:
+        raise NotImplementedError
+
+    def rounds_done(self) -> int:
+        raise NotImplementedError
+
+    def need(self, cell: int) -> int:
+        """Arrivals until ``cell``'s round closes (A − pending)."""
+        raise NotImplementedError
+
+    def participants(self, cell: int) -> int:
+        """``cell``'s A (round size) — the fused-path batch target."""
+        raise NotImplementedError
+
+    def on_arrival(self, cell: int, ue: int,
+                   payload: Any) -> Optional[Dict[str, Any]]:
+        raise NotImplementedError
+
+    def on_round_batch(self, cell: int, ues: List[int],
+                       aggregate_fn: Callable) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def protocol(self) -> Any:
+        """The top-level protocol object (``params`` / ``pi_matrix`` /
+        ``realised_eta``)."""
+        raise NotImplementedError
+
+    # --- topology hooks (static topology: all no-ops) ------------------
+    def dispatch_cell(self, ue: int) -> int:
+        """Cell stamped on a cycle's heap event at dispatch time; arrivals
+        are routed back to this cell even if the UE hands over while the
+        upload is in flight."""
+        return 0
+
+    def advance_to(self, t: float) -> None:
+        """Move simulated time forward (mobility, handovers, bookkeeping)."""
+
+    def pre_requeue(self, ues) -> None:
+        """Chance to refresh per-UE bandwidth before pricing new cycles."""
+
+    def result_extras(self) -> Dict[str, Any]:
+        """Extra ``SimResult`` fields (cells / handovers / cloud merges)."""
+        return {}
+
+
+def make_cycle_duration_fn(adapter: TopologyAdapter, wl, z_bits: float,
+                           d_i: np.ndarray) -> Callable[[Any], np.ndarray]:
+    """Batched requeue pricing: ONE fading draw + vectorized Eq. (10)–(11).
+
+    The legacy drivers priced each requeued UE alone — ``sample_fading()``
+    draws the whole [n] Rayleigh vector, then a ``UEChannel`` and
+    python-scalar timing math, per UE per requeue.  Here a requeue of k UEs
+    draws one ``[k, n]`` matrix and the timing math vectorizes over the k
+    lanes.  Every value is bitwise identical to the legacy loop: the batch
+    draw consumes the same bitstream, and ``pathloss_pow`` keeps d^{−κ} on
+    libm's scalar pow — a full cached vector on frozen topologies, per-lane
+    pricing once mobility starts replacing the distances array (see
+    ``_pathloss`` below).
+    """
+    net = adapter.net
+    p, kappa = wl.tx_power_w, wl.path_loss_exp
+    n0 = noise_w_per_hz(wl.noise_dbm_per_hz)
+    cycles = wl.cpu_cycles_per_sample
+    cache: Dict[str, Any] = {"src": None, "pw": None, "volatile": False}
+
+    def _pathloss(dists, idx: np.ndarray) -> np.ndarray:
+        # Static topologies keep one distances array for the whole run →
+        # build the full d^{−κ} vector once and index it forever.  Moving
+        # mobility replaces the array on every movement step; a full
+        # rebuild there would cost O(n) scalar pows per requeue, so on the
+        # second distinct array we switch to pricing only the requeued
+        # lanes (k scalar pows — exactly the legacy per-UE cost).
+        if cache["src"] is dists:
+            return cache["pw"][idx]
+        if not cache["volatile"] and cache["src"] is None:
+            cache["pw"] = pathloss_pow(dists, kappa)
+            cache["src"] = dists
+            return cache["pw"][idx]
+        cache["volatile"] = True
+        cache["src"], cache["pw"] = None, None
+        return pathloss_pow(np.asarray(dists)[idx], kappa)
+
+    def cycle_durations(ues) -> np.ndarray:
+        adapter.pre_requeue(ues)
+        idx = np.asarray(ues, dtype=np.int64)
+        k = len(idx)
+        h = net.sample_fading_batch(k)[np.arange(k), idx]
+        tcmp = compute_times(cycles, d_i[idx], net.cpu_freq[idx])
+        q = p * h * _pathloss(net.distances, idx) / n0   # UEChannel.q
+        tcom = upload_times(z_bits, adapter.bw[idx], q)
+        return tcmp + tcom
+
+    return cycle_durations
+
+
+def run_event_loop(cfg: ExperimentConfig, model,
+                   clients: List[ClientDataset],
+                   adapter: TopologyAdapter, *,
+                   algorithm: str = "perfed", mode: str = "semi",
+                   max_rounds: Optional[int] = None,
+                   eval_every: int = 5, eval_clients: int = 8,
+                   seed: int = 0, name: Optional[str] = None,
+                   verbose: bool = False,
+                   payload_mode: Optional[str] = None,
+                   engine: Optional[SimulationEngine] = None) -> SimResult:
+    fl, wl = cfg.fl, cfg.wireless
+    n = len(clients)
+    max_rounds = max_rounds or fl.rounds
+    rng = np.random.default_rng(seed)
+    # one independent key per consumer (init / payloads / evals)
+    init_key, payload_key, eval_key = jax.random.split(
+        jax.random.PRNGKey(seed), 3)
+
+    # --- model / engine -----------------------------------------------------
+    params0 = model.init(init_key)
+    z_bits = wl.grad_bits or model_bits(params0, wl.bits_per_param)
+    engine = ensure_engine(engine, model, fl, algorithm=algorithm,
+                           payload_mode=payload_mode)
+    # snapshot so SimResult reports THIS run's dispatch counts even when the
+    # engine (and its lifetime counters) is shared across a sweep
+    disp0, pay0 = engine.dispatches, engine.payloads_computed
+    # per-UE inner learning rates α_i (paper §II-B: "easily extended to the
+    # general case when UEs have diverse learning rate α_i")
+    if fl.alpha_spread > 0:
+        s = 1.0 + fl.alpha_spread
+        alphas = fl.alpha * np.exp(rng.uniform(-np.log(s), np.log(s), size=n))
+    else:
+        alphas = np.full(n, fl.alpha)
+
+    adapter.make_servers(params0)
+
+    # --- per-UE state -------------------------------------------------------
+    held_params: List[Any] = [params0 for _ in range(n)]
+    d_i = np.array([min(fl.inner_batch + fl.outer_batch + fl.hessian_batch,
+                        len(c)) for c in clients])
+    busy_time = np.zeros(n)
+    # batch shapes are a pure function of the shard size; a round whose UEs
+    # share one signature can take the fused path, mixed rounds fall back to
+    # bucketed payloads (rule lives on ClientDataset, next to the sampler)
+    batch_sig = [c.triplet_sizes(fl.inner_batch, fl.outer_batch,
+                                 fl.hessian_batch) for c in clients]
+
+    cycle_durations = make_cycle_duration_fn(adapter, wl, z_bits, d_i)
+
+    # --- eval ----------------------------------------------------------------
+    eval_idx = rng.choice(n, size=min(eval_clients, n), replace=False)
+
+    def evaluate(params, k: int) -> Tuple[float, float, float]:
+        r = jax.random.fold_in(eval_key, k)
+        pl, gl, ac = [], [], []
+        for ci in eval_idx:
+            c = clients[ci]
+            r, sub = jax.random.split(r)
+            batches = {"inner": c.sample(fl.inner_batch),
+                       "outer": {k2: v for k2, v in c.test.items()}}
+            p, g, a = engine.eval_one(params, batches, sub)
+            pl.append(float(p)); gl.append(float(g)); ac.append(float(a))
+        acc = (float(np.nanmean(ac))
+               if np.any(np.isfinite(ac)) else float("nan"))
+        return float(np.mean(pl)), float(np.mean(gl)), acc
+
+    # --- event loop ----------------------------------------------------------
+    # epoch-based lazy cancellation: when the server re-distributes to a UE
+    # whose upload is still in flight (τ > S forced refresh, Alg. 1 line 13),
+    # the UE ABANDONS the stale computation and restarts — the old event is
+    # dropped at pop time if its epoch is outdated.
+    # event = (t_finish, seq, ue, version, duration, epoch, dispatch_cell)
+    heap: List[Tuple[float, int, int, int, float, int, int]] = []
+    epoch = np.zeros(n, dtype=np.int64)
+    seq = 0
+    all_ues = np.arange(n)
+    for i, dur in zip(all_ues, cycle_durations(all_ues)):
+        heapq.heappush(heap, (float(dur), seq, int(i), 0, float(dur), 0,
+                              adapter.dispatch_cell(int(i))))
+        seq += 1
+
+    times, plosses, glosses, accs, rounds_at = [], [], [], [], []
+    t_now = 0.0
+    do_eval = eval_every > 0            # 0 → pure-throughput mode, no evals
+
+    if do_eval:
+        p0, g0, a0 = evaluate(params0, 0)
+        times.append(0.0); plosses.append(p0); glosses.append(g0)
+        accs.append(a0); rounds_at.append(0)
+
+    def restart_departed(ue: int) -> None:
+        # Liveness for handed-over UEs: an upload that closed at the SOURCE
+        # cell gets no redistribution from it (the UE is no longer a
+        # member), and the destination owes it nothing until the τ > S
+        # forced refresh — so the device simply continues from the model it
+        # already holds.  Its true staleness was grafted onto the
+        # destination's round clock at handover time, so the next upload is
+        # weighted correctly there.  Without this the UE would idle for up
+        # to S destination rounds after every mid-flight handover.
+        nonlocal seq
+        (dur,) = cycle_durations([ue])
+        heapq.heappush(heap, (t_now + float(dur), seq, ue,
+                              adapter.rounds_done(), float(dur),
+                              int(epoch[ue]), adapter.dispatch_cell(ue)))
+        seq += 1
+
+    def handle(result) -> None:
+        nonlocal seq
+        dist = result["distribute"]
+        if dist:
+            for i in dist:
+                held_params[i] = result["params"]
+                epoch[i] += 1           # cancels any in-flight computation
+            for i, dur_i in zip(dist, cycle_durations(dist)):
+                heapq.heappush(heap, (t_now + float(dur_i), seq, i,
+                                      result["round"], float(dur_i),
+                                      int(epoch[i]),
+                                      adapter.dispatch_cell(i)))
+                seq += 1
+        k = result["round"]
+        if do_eval and (k % eval_every == 0 or k == max_rounds):
+            p, g, a = evaluate(result["params"], k)
+            times.append(t_now); plosses.append(p); glosses.append(g)
+            accs.append(a); rounds_at.append(k)
+            if verbose:
+                cell = f" cell={result['cell']}" if "cell" in result else ""
+                print(f"[{name or algorithm}-{mode}]{cell} round {k:4d} "
+                      f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
+
+    while adapter.rounds_done() < max_rounds and heap:
+        # ---- drain arrivals until the first cell would close its round ----
+        # No distribution (hence no cancellation, no membership effect on
+        # queued events) can occur before then, so every drained payload is
+        # computable NOW, as one batch — per cell.  ``need`` is recomputed
+        # per pop: it depends only on pending-upload counts, which change
+        # exclusively when arrivals are *fed* (after the drain), never on
+        # mid-drain handovers — recomputing makes the loop robust to future
+        # protocols where that invariant stops holding, at O(1) cost.
+        drained = [0] * adapter.n_protocol_cells
+        batch: List[Tuple[float, int, int, float, int]] = []
+        closing: Optional[int] = None
+        while heap:
+            t, sq, ue, _version, dur, ev_epoch, cell = heapq.heappop(heap)
+            if ev_epoch != epoch[ue]:
+                continue                # abandoned (stale-refresh) cycle
+            adapter.advance_to(t)
+            # route by the *stamped* dispatch cell: an upload in flight
+            # across a handover still closes the round it was computed for
+            batch.append((t, ue, sq, dur, cell))
+            drained[cell] += 1
+            if drained[cell] >= adapter.need(cell):
+                closing = cell
+                break
+        if not batch:
+            break
+
+        held = [held_params[ue] for _, ue, _, _, _ in batch]
+        triplets = [clients[ue].sample_triplet(fl.inner_batch, fl.outer_batch,
+                                               fl.hessian_batch)
+                    for _, ue, _, _, _ in batch]
+        a_i = [alphas[ue] for _, ue, _, _, _ in batch]
+
+        srv_a = adapter.participants(closing) if closing is not None else -1
+        if (engine.payload_mode == "batched" and len(batch) == srv_a
+                and srv_a <= engine.max_bucket
+                and all(b[4] == closing for b in batch)
+                and len({batch_sig[ue] for _, ue, _, _, _ in batch}) == 1):
+            # fused fast path: the whole round of the closing cell — per-
+            # arrival RNG, vmapped payloads, Eq. (8) stale aggregation —
+            # fuses into one device dispatch per model-version group
+            for t, ue, _sq, dur, _c in batch:
+                t_now = t
+                busy_time[ue] += dur    # only completed cycles count as busy
+
+            def aggregate(params, weights):
+                return engine.round_update(
+                    params, held, triplets,
+                    [sq for _, _, sq, _, _ in batch],
+                    a_i, weights, beta=fl.beta, base_key=payload_key)
+
+            handle(adapter.on_round_batch(
+                closing, [ue for _, ue, _, _, _ in batch], aggregate))
+            for _t, ue, _sq, _dur, cell in batch:
+                if adapter.dispatch_cell(ue) != cell:
+                    restart_departed(ue)
+        else:
+            payloads = engine.compute_payloads(
+                held, triplets,
+                [jax.random.fold_in(payload_key, sq)
+                 for _, _, sq, _, _ in batch],
+                a_i)
+            # ---- feed the protocol in arrival order ------------------------
+            for (t, ue, _sq, dur, cell), payload in zip(batch, payloads):
+                t_now = t
+                busy_time[ue] += dur    # only completed cycles count as busy
+                result = adapter.on_arrival(cell, ue, payload)
+                if result is not None:
+                    handle(result)
+                if adapter.dispatch_cell(ue) != cell:
+                    restart_departed(ue)
+
+    # drain the async dispatch queue so wall-clock timings of this function
+    # include all device work it issued (jit dispatch is asynchronous)
+    proto = adapter.protocol()
+    jax.block_until_ready(jax.tree.leaves(proto.params))
+
+    wait_frac = float(1.0 - busy_time.sum() / max(n * t_now, 1e-9))
+    return SimResult(
+        name=name or f"{algorithm}-{mode}",
+        times=np.array(times), losses=np.array(plosses),
+        global_losses=np.array(glosses), accs=np.array(accs),
+        rounds=np.array(rounds_at), total_time=t_now,
+        pi=proto.pi_matrix(), eta_target=adapter.eta,
+        eta_realised=proto.realised_eta(),
+        wait_fraction=max(wait_frac, 0.0),
+        payload_dispatches=engine.dispatches - disp0,
+        payloads_computed=engine.payloads_computed - pay0,
+        **adapter.result_extras(),
+    )

@@ -1,38 +1,40 @@
 """Mobile multi-cell simulation driver (``cfg.mobility.enabled=True``).
 
-The same event-driven PerFedS² loop as ``fl/simulation.py``, generalised to
-a ``MultiCellNetwork``:
+The same event-driven PerFedS² loop as ``fl/simulation.py`` — literally:
+both are thin configurations of ``fl.driver.run_event_loop``.  The
+``MobileAdapter`` below contributes what mobility changes:
 
 * UE positions advance under a vectorized mobility model as simulated time
   passes, so path loss — and therefore upload times and the straggler
-  population — is *time-varying*.
+  population — is *time-varying* (``advance_to``).
 * Each UE associates with the nearest BS; handovers re-home it to the new
   cell's scheduler and bandwidth budget (cells whose membership changed are
-  re-allocated lazily, at the next cycle start that needs them).
+  re-allocated lazily, at the next requeue that touches them —
+  ``pre_requeue``).
 * With ``mobility.hierarchy`` on, each cell runs its own semi-synchronous
   edge server (Eq. 8 via the engine's fused ``stale_aggregate_tree`` path)
   and a cloud tier merges cell models every ``cloud_sync_every`` edge
   rounds (``core/hierarchy.py``).
 
-Batching: arrivals are drained in time order until the first server (cell)
-would close its round — none of those events can be affected by a
-distribution, so their payloads are computable as one engine batch, exactly
-the invariant the single-cell driver exploits.  When the whole drain
-belongs to one cell and matches its ``A``, the engine's fused
-one-dispatch-per-version-group ``round_update`` path is taken verbatim.
+Arrival routing: heap events carry the cell that *dispatched* the cycle
+(the UE's association at cycle start), and the driver routes each arrival
+back to that cell.  An upload in flight across a handover therefore counts
+toward — and closes — the round it was computed against, and
+``HierarchicalServer``'s departed-UE bookkeeping (visiting staleness, no
+membership resurrection) actually fires.  Routing by pop-time association,
+as the pre-unification driver did, both mis-credited such uploads to the
+destination cell and made the departed path dead code.
 
 Degenerate configuration (speed 0, one cell, hierarchy off) reproduces the
 static single-cell driver **bitwise** for the same seed: the network
 consumes the main RNG stream in the legacy order, the drain yields the
 identical batches, and all engine calls receive identical inputs
-(pinned by ``tests/test_mobility.py``).
+(pinned by ``tests/test_mobility.py`` and ``tests/test_driver.py``).
 """
 from __future__ import annotations
 
-import heapq
-from typing import Any, List, Optional, Tuple
+from typing import List, Optional
 
-import jax
 import numpy as np
 
 from repro.config import ExperimentConfig
@@ -41,10 +43,140 @@ from repro.core.hierarchy import HierarchicalServer, HierarchyConfig
 from repro.core.scheduler import get_policy
 from repro.core.server import SemiSyncServer, ServerConfig
 from repro.data.partition import ClientDataset
-from repro.fl.engine import SimulationEngine, ensure_engine
-from repro.fl.simulation import SimResult
+from repro.fl.driver import SimResult, TopologyAdapter, run_event_loop
+from repro.fl.engine import SimulationEngine
 from repro.mobility.multicell import MultiCellNetwork
-from repro.wireless.timing import compute_time, upload_time, model_bits
+
+__all__ = ["SimResult", "MobileAdapter", "run_mobile_simulation"]
+
+
+class MobileAdapter(TopologyAdapter):
+    """Moving multi-cell topology + per-cell (or flat) semi-sync protocol."""
+
+    def __init__(self, cfg: ExperimentConfig, n: int, *, seed: int,
+                 bandwidth_policy: str, mode: str):
+        fl, mob, wl = cfg.fl, cfg.mobility, cfg.wireless
+        policy = get_policy(fl.eta_mode)
+        self.net = MultiCellNetwork.drop(
+            wl, n, n_cells=mob.n_cells, seed=seed, mobility=mob.model,
+            speed_mps=mob.speed_mps, pause_s=mob.pause_s,
+            gm_alpha=mob.gm_alpha, uniform_distance=policy.uniform_drop,
+            step_s=mob.step_s)
+        self.eta = policy.frequencies(n, self.net)
+        self._h_mean = wl.rayleigh_scale * float(np.sqrt(np.pi / 2))
+
+        if bandwidth_policy not in ("optimal", "equal"):
+            raise ValueError(f"unknown bandwidth policy {bandwidth_policy!r}")
+        self._bandwidth_policy = bandwidth_policy
+        self._total_bw = wl.total_bandwidth_hz
+        self.bw = np.zeros(n)
+        self._dirty_cells: set = set()
+        for c in range(self.net.n_cells):
+            self._realloc(c)
+
+        self._hier_on = mob.hierarchy and mob.n_cells > 1
+        if self._hier_on and mode != "semi":
+            raise ValueError("hierarchical aggregation runs semi-sync edge "
+                             f"servers; mode={mode!r} is not supported")
+        self.n_protocol_cells = mob.n_cells if self._hier_on else 1
+        self._fl, self._mob, self._mode, self._n = fl, mob, mode, n
+        self.hier: Optional[HierarchicalServer] = None
+        self.server: Optional[SemiSyncServer] = None
+
+    # --- per-cell bandwidth (re-allocated lazily on membership change) -
+    def _realloc(self, c: int) -> None:
+        members = self.net.cell_members(c)
+        if len(members) == 0:
+            return
+        if self._bandwidth_policy == "optimal":
+            chans = [self.net.channel(i, self._h_mean) for i in members]
+            self.bw[members] = weighted_equal_rate_allocation(
+                self.eta[members], chans, self._total_bw)
+        else:
+            self.bw[members] = self._total_bw / len(members)
+
+    # --- protocol ------------------------------------------------------
+    def make_servers(self, params0) -> None:
+        fl, mob, n = self._fl, self._mob, self._n
+        if self._hier_on:
+            a_req = mob.cell_participants or max(
+                1, -(-fl.participants_per_round // mob.n_cells))
+            members0 = [self.net.cell_members(c) for c in range(mob.n_cells)]
+            # cap each cell's A at its initial population: a cell holding
+            # fewer members than A could never close a round and would
+            # starve its UEs
+            cell_cfgs = [ServerConfig(
+                n_ues=n,
+                participants_per_round=max(1, min(a_req, max(len(m), 1))),
+                staleness_bound=fl.staleness_bound, beta=fl.beta,
+                mode="semi", staleness_discount=fl.staleness_discount)
+                for m in members0]
+            self.hier = HierarchicalServer(
+                params0, cell_cfgs,
+                HierarchyConfig(n_cells=mob.n_cells,
+                                cloud_sync_every=mob.cloud_sync_every),
+                members0)
+        else:
+            self.server = SemiSyncServer(params0, ServerConfig(
+                n_ues=n, participants_per_round=fl.participants_per_round,
+                staleness_bound=fl.staleness_bound, beta=fl.beta,
+                mode=self._mode, staleness_discount=fl.staleness_discount))
+
+    def rounds_done(self) -> int:
+        return self.hier.edge_rounds if self.hier is not None \
+            else self.server.round
+
+    def need(self, cell: int) -> int:
+        if self.hier is not None:
+            return self.hier.arrivals_until_round(cell)
+        return self.server.arrivals_until_round()
+
+    def participants(self, cell: int) -> int:
+        return self.hier.cells[cell].a if self.hier is not None \
+            else self.server.a
+
+    def on_arrival(self, cell, ue, payload):
+        if self.hier is not None:
+            return self.hier.on_arrival(cell, ue, payload)
+        return self.server.on_arrival(ue, payload)
+
+    def on_round_batch(self, cell, ues, aggregate_fn):
+        if self.hier is not None:
+            return self.hier.on_round_batch(cell, ues, aggregate_fn)
+        return self.server.on_round_batch(ues, aggregate_fn)
+
+    def protocol(self):
+        return self.hier if self.hier is not None else self.server
+
+    # --- topology ------------------------------------------------------
+    def dispatch_cell(self, ue: int) -> int:
+        # stamped on the heap event so the arrival routes back here even
+        # if the UE hands over while the upload is in flight
+        return int(self.net.assoc[ue]) if self.hier is not None else 0
+
+    def advance_to(self, t: float) -> None:
+        for (u, src, dst) in self.net.advance_to(t):
+            if self.hier is not None:
+                self.hier.handover(u, src, dst)
+            self._dirty_cells.add(src)
+            self._dirty_cells.add(dst)
+
+    def pre_requeue(self, ues) -> None:
+        for i in ues:
+            c = int(self.net.assoc[i])
+            if c in self._dirty_cells:
+                self._realloc(c)
+                self._dirty_cells.discard(c)
+
+    def result_extras(self):
+        return {
+            "n_cells": self.net.n_cells,
+            "handovers": self.net.handovers,
+            "cloud_rounds":
+                self.hier.cloud_rounds if self.hier is not None else 0,
+            "departed_arrivals":
+                self.hier.departed_arrivals if self.hier is not None else 0,
+        }
 
 
 def run_mobile_simulation(cfg: ExperimentConfig, model,
@@ -58,251 +190,11 @@ def run_mobile_simulation(cfg: ExperimentConfig, model,
                           payload_mode: Optional[str] = None,
                           engine: Optional[SimulationEngine] = None
                           ) -> SimResult:
-    fl, mob, wl = cfg.fl, cfg.mobility, cfg.wireless
-    n = len(clients)
-    max_rounds = max_rounds or fl.rounds
-    rng = np.random.default_rng(seed)
-    init_key, payload_key, eval_key = jax.random.split(
-        jax.random.PRNGKey(seed), 3)
-
-    # --- network + η -------------------------------------------------------
-    policy = get_policy(fl.eta_mode)
-    net = MultiCellNetwork.drop(
-        wl, n, n_cells=mob.n_cells, seed=seed, mobility=mob.model,
-        speed_mps=mob.speed_mps, pause_s=mob.pause_s, gm_alpha=mob.gm_alpha,
-        uniform_distance=policy.uniform_drop, step_s=mob.step_s)
-    eta = policy.frequencies(n, net)
-    h_mean = wl.rayleigh_scale * float(np.sqrt(np.pi / 2))
-
-    # --- per-cell bandwidth (re-allocated lazily on membership change) -----
-    if bandwidth_policy not in ("optimal", "equal"):
-        raise ValueError(f"unknown bandwidth policy {bandwidth_policy!r}")
-    bw = np.zeros(n)
-    dirty_cells: set = set()
-
-    def realloc(c: int) -> None:
-        members = net.cell_members(c)
-        if len(members) == 0:
-            return
-        if bandwidth_policy == "optimal":
-            chans = [net.channel(i, h_mean) for i in members]
-            bw[members] = weighted_equal_rate_allocation(
-                eta[members], chans, wl.total_bandwidth_hz)
-        else:
-            bw[members] = wl.total_bandwidth_hz / len(members)
-
-    for c in range(net.n_cells):
-        realloc(c)
-
-    # --- model / engine ----------------------------------------------------
-    params0 = model.init(init_key)
-    z_bits = wl.grad_bits or model_bits(params0, wl.bits_per_param)
-    engine = ensure_engine(engine, model, fl, algorithm=algorithm,
-                           payload_mode=payload_mode)
-    disp0, pay0 = engine.dispatches, engine.payloads_computed
-
-    if fl.alpha_spread > 0:
-        s = 1.0 + fl.alpha_spread
-        alphas = fl.alpha * np.exp(rng.uniform(-np.log(s), np.log(s), size=n))
-    else:
-        alphas = np.full(n, fl.alpha)
-
-    # --- servers -----------------------------------------------------------
-    hier: Optional[HierarchicalServer] = None
-    server: Optional[SemiSyncServer] = None
-    if mob.hierarchy and mob.n_cells > 1:
-        if mode != "semi":
-            raise ValueError("hierarchical aggregation runs semi-sync edge "
-                             f"servers; mode={mode!r} is not supported")
-        a_req = mob.cell_participants or max(
-            1, -(-fl.participants_per_round // mob.n_cells))
-        members0 = [net.cell_members(c) for c in range(mob.n_cells)]
-        # cap each cell's A at its initial population: a cell holding fewer
-        # members than A could never close a round and would starve its UEs
-        cell_cfgs = [ServerConfig(
-            n_ues=n, participants_per_round=max(1, min(a_req, max(len(m),
-                                                                  1))),
-            staleness_bound=fl.staleness_bound, beta=fl.beta, mode="semi",
-            staleness_discount=fl.staleness_discount)
-            for m in members0]
-        hier = HierarchicalServer(
-            params0, cell_cfgs,
-            HierarchyConfig(n_cells=mob.n_cells,
-                            cloud_sync_every=mob.cloud_sync_every),
-            members0)
-    else:
-        server = SemiSyncServer(params0, ServerConfig(
-            n_ues=n, participants_per_round=fl.participants_per_round,
-            staleness_bound=fl.staleness_bound, beta=fl.beta, mode=mode,
-            staleness_discount=fl.staleness_discount))
-
-    def rounds_done() -> int:
-        return hier.edge_rounds if hier is not None else server.round
-
-    # --- per-UE state ------------------------------------------------------
-    held_params: List[Any] = [params0 for _ in range(n)]
-    d_i = np.array([min(fl.inner_batch + fl.outer_batch + fl.hessian_batch,
-                        len(c)) for c in clients])
-    busy_time = np.zeros(n)
-    batch_sig = [c.triplet_sizes(fl.inner_batch, fl.outer_batch,
-                                 fl.hessian_batch) for c in clients]
-
-    def cycle_duration(i: int) -> float:
-        c = int(net.assoc[i])
-        if c in dirty_cells:
-            realloc(c)
-            dirty_cells.discard(c)
-        h = float(net.sample_fading()[i])
-        tcmp = compute_time(wl.cpu_cycles_per_sample, int(d_i[i]),
-                            float(net.cpu_freq[i]))
-        tcom = upload_time(z_bits, float(bw[i]), net.channel(i, h))
-        return tcmp + tcom
-
-    # --- eval --------------------------------------------------------------
-    eval_idx = rng.choice(n, size=min(eval_clients, n), replace=False)
-
-    def evaluate(params, k: int) -> Tuple[float, float, float]:
-        r = jax.random.fold_in(eval_key, k)
-        pl, gl, ac = [], [], []
-        for ci in eval_idx:
-            c = clients[ci]
-            r, sub = jax.random.split(r)
-            batches = {"inner": c.sample(fl.inner_batch),
-                       "outer": {k2: v for k2, v in c.test.items()}}
-            p, g, a = engine.eval_one(params, batches, sub)
-            pl.append(float(p)); gl.append(float(g)); ac.append(float(a))
-        acc = (float(np.nanmean(ac))
-               if np.any(np.isfinite(ac)) else float("nan"))
-        return float(np.mean(pl)), float(np.mean(gl)), acc
-
-    # --- event loop --------------------------------------------------------
-    heap: List[Tuple[float, int, int, int, float, int]] = []
-    epoch = np.zeros(n, dtype=np.int64)
-    seq = 0
-    for i in range(n):
-        dur = cycle_duration(i)
-        heapq.heappush(heap, (dur, seq, i, 0, dur, 0))
-        seq += 1
-
-    times, plosses, glosses, accs, rounds_at = [], [], [], [], []
-    t_now = 0.0
-    do_eval = eval_every > 0
-
-    if do_eval:
-        p0, g0, a0 = evaluate(params0, 0)
-        times.append(0.0); plosses.append(p0); glosses.append(g0)
-        accs.append(a0); rounds_at.append(0)
-
-    def handle(result) -> None:
-        nonlocal seq
-        for i in result["distribute"]:
-            held_params[i] = result["params"]
-            epoch[i] += 1           # cancels any in-flight computation
-            dur_i = cycle_duration(i)
-            heapq.heappush(heap, (t_now + dur_i, seq, i, result["round"],
-                                  dur_i, int(epoch[i])))
-            seq += 1
-        k = result["round"]
-        if do_eval and (k % eval_every == 0 or k == max_rounds):
-            p, g, a = evaluate(result["params"], k)
-            times.append(t_now); plosses.append(p); glosses.append(g)
-            accs.append(a); rounds_at.append(k)
-            if verbose:
-                cell = f" cell={result['cell']}" if "cell" in result else ""
-                print(f"[{name or algorithm}-{mode}]{cell} round {k:4d} "
-                      f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
-
-    while rounds_done() < max_rounds and heap:
-        # ---- drain arrivals until the first cell would close its round ----
-        # No distribution (hence no cancellation, no membership effect on
-        # queued events) can occur before then, so every drained payload is
-        # computable NOW, as one batch — the same invariant the static
-        # driver exploits, held per cell.
-        if hier is not None:
-            need = [hier.arrivals_until_round(c)
-                    for c in range(mob.n_cells)]
-        else:
-            need = [server.arrivals_until_round()]
-        drained = [0] * len(need)
-        batch: List[Tuple[float, int, int, float, int]] = []
-        closing: Optional[int] = None
-        while heap:
-            t, sq, ue, _version, dur, ev_epoch = heapq.heappop(heap)
-            if ev_epoch != epoch[ue]:
-                continue                # abandoned (stale-refresh) cycle
-            for (u, src, dst) in net.advance_to(t):
-                if hier is not None:
-                    hier.handover(u, src, dst)
-                dirty_cells.add(src)
-                dirty_cells.add(dst)
-            c = int(net.assoc[ue]) if hier is not None else 0
-            batch.append((t, ue, sq, dur, c))
-            drained[c] += 1
-            if drained[c] >= need[c]:
-                closing = c
-                break
-        if not batch:
-            break
-
-        held = [held_params[ue] for _, ue, _, _, _ in batch]
-        triplets = [clients[ue].sample_triplet(fl.inner_batch, fl.outer_batch,
-                                               fl.hessian_batch)
-                    for _, ue, _, _, _ in batch]
-        a_i = [alphas[ue] for _, ue, _, _, _ in batch]
-
-        srv_a = (hier.cells[closing].a if hier is not None else server.a) \
-            if closing is not None else -1
-        if (engine.payload_mode == "batched" and len(batch) == srv_a
-                and srv_a <= engine.max_bucket
-                and all(b[4] == closing for b in batch)
-                and len({batch_sig[ue] for _, ue, _, _, _ in batch}) == 1):
-            # fused fast path: the whole round of the closing cell — one
-            # device dispatch per model-version group
-            for t, ue, _sq, dur, _c in batch:
-                t_now = t
-                busy_time[ue] += dur
-
-            def aggregate(params, weights):
-                return engine.round_update(
-                    params, held, triplets,
-                    [sq for _, _, sq, _, _ in batch],
-                    a_i, weights, beta=fl.beta, base_key=payload_key)
-
-            ues = [ue for _, ue, _, _, _ in batch]
-            if hier is not None:
-                handle(hier.on_round_batch(closing, ues, aggregate))
-            else:
-                handle(server.on_round_batch(ues, aggregate))
-        else:
-            payloads = engine.compute_payloads(
-                held, triplets,
-                [jax.random.fold_in(payload_key, sq)
-                 for _, _, sq, _, _ in batch],
-                a_i)
-            for (t, ue, _sq, dur, c), payload in zip(batch, payloads):
-                t_now = t
-                busy_time[ue] += dur
-                if hier is not None:
-                    result = hier.on_arrival(c, ue, payload)
-                else:
-                    result = server.on_arrival(ue, payload)
-                if result is not None:
-                    handle(result)
-
-    proto = hier if hier is not None else server
-    jax.block_until_ready(jax.tree.leaves(proto.params))
-
-    wait_frac = float(1.0 - busy_time.sum() / max(n * t_now, 1e-9))
-    return SimResult(
-        name=name or f"{algorithm}-{mode}",
-        times=np.array(times), losses=np.array(plosses),
-        global_losses=np.array(glosses), accs=np.array(accs),
-        rounds=np.array(rounds_at), total_time=t_now,
-        pi=proto.pi_matrix(), eta_target=eta,
-        eta_realised=proto.realised_eta(),
-        wait_fraction=max(wait_frac, 0.0),
-        payload_dispatches=engine.dispatches - disp0,
-        payloads_computed=engine.payloads_computed - pay0,
-        n_cells=net.n_cells, handovers=net.handovers,
-        cloud_rounds=hier.cloud_rounds if hier is not None else 0,
-    )
+    adapter = MobileAdapter(cfg, len(clients), seed=seed,
+                            bandwidth_policy=bandwidth_policy, mode=mode)
+    return run_event_loop(cfg, model, clients, adapter,
+                          algorithm=algorithm, mode=mode,
+                          max_rounds=max_rounds, eval_every=eval_every,
+                          eval_clients=eval_clients, seed=seed, name=name,
+                          verbose=verbose, payload_mode=payload_mode,
+                          engine=engine)

@@ -1,4 +1,4 @@
-"""Event-driven simulator of PerFedS² over a mobile edge network.
+"""Static single-cell simulation of PerFedS² (the paper's Sec. VI setup).
 
 Combines all the pieces:
 
@@ -7,33 +7,21 @@ Combines all the pieces:
   core.scheduler         — SchedulingPolicy (equal / rates-derived η)
   core.server            — Algorithm 1 round protocol (sync / semi / async)
   fl.engine              — batched (vmap-bucketed) payload computation
+  fl.driver              — the ONE event loop (heap, drain batching, RNG
+                           discipline, fused dispatch, SimResult)
   fl.client              — payload math (fedavg / fedprox / perfed)
 
-The event loop is a priority queue over UE upload-finish times.  Each UE
-holds the last model version it received; payloads are computed against that
-version (⇒ real gradient staleness, exactly as in the paper).  Wall-clock
-time uses Eq. (10)–(12) with fading resampled per local iteration.
-
-This module is a *thin driver*: it drains all arrivals up to the next round
-boundary (the server needs ``A − pending`` more uploads before anything can
-change — no redistribution, hence no cancellation, can occur before then, so
-those payloads are all computable NOW) and hands them to the
-``SimulationEngine`` as one batch.  All device math lives in the engine; the
-loop only moves simulated time, RNG keys, and bookkeeping.
-
-RNG discipline: the seed key is split once into (init, payload, eval)
-streams; each arrival folds its unique event id into the payload stream and
-each eval folds the round index into the eval stream, so every consumer gets
-an independent key and batched vs sequential runs of the same seed see the
-same randomness.
+``run_simulation`` is a thin configuration of ``fl.driver.run_event_loop``:
+the ``StaticAdapter`` below contributes a frozen single-cell drop, a static
+Theorem-4 (or equal-split) bandwidth allocation, and one global
+``SemiSyncServer``; everything event-driven lives in the shared driver.
+The mobile multi-cell path (``cfg.mobility.enabled``) configures the same
+loop with a ``MobileAdapter`` — see ``fl/mobile.py``.
 """
 from __future__ import annotations
 
-import heapq
-from dataclasses import dataclass
-from typing import Any, List, Optional, Tuple
+from typing import List, Optional
 
-import jax
 import numpy as np
 
 from repro.config import ExperimentConfig
@@ -41,30 +29,60 @@ from repro.core.bandwidth import weighted_equal_rate_allocation
 from repro.core.scheduler import get_policy
 from repro.core.server import SemiSyncServer, ServerConfig
 from repro.data.partition import ClientDataset
-from repro.fl.engine import SimulationEngine, ensure_engine
+from repro.fl.driver import SimResult, TopologyAdapter, run_event_loop
+from repro.fl.engine import SimulationEngine
 from repro.wireless.channel import EdgeNetwork
-from repro.wireless.timing import compute_time, upload_time, model_bits
+
+__all__ = ["SimResult", "StaticAdapter", "run_simulation"]
 
 
-@dataclass
-class SimResult:
-    name: str
-    times: np.ndarray            # wall-clock at each eval point [s]
-    losses: np.ndarray           # personalized (PFL) eval loss
-    global_losses: np.ndarray    # loss of the raw global model
-    accs: np.ndarray             # accuracy if the task defines one (else nan)
-    rounds: np.ndarray           # round index at each eval point
-    total_time: float
-    pi: np.ndarray               # realised schedule matrix
-    eta_target: np.ndarray
-    eta_realised: np.ndarray
-    wait_fraction: float         # mean fraction of time UEs spent idle
-    payload_dispatches: int = 0  # device dispatches issued by the engine
-    payloads_computed: int = 0   # payloads those dispatches produced
-    # mobile multi-cell extension (zeros on the static single-cell path)
-    n_cells: int = 1
-    handovers: int = 0           # nearest-BS re-associations during the run
-    cloud_rounds: int = 0        # hierarchical cloud merges performed
+class StaticAdapter(TopologyAdapter):
+    """Frozen single-cell geometry + one global Algorithm-1 server."""
+
+    def __init__(self, cfg: ExperimentConfig, n: int, *, seed: int,
+                 bandwidth_policy: str, mode: str):
+        fl, wl = cfg.fl, cfg.wireless
+        policy = get_policy(fl.eta_mode)
+        self.net = EdgeNetwork.drop(wl, n, seed=seed,
+                                    uniform_distance=policy.uniform_drop)
+        self.eta = policy.frequencies(n, self.net)
+        h_mean = wl.rayleigh_scale * float(np.sqrt(np.pi / 2))
+        mean_chans = [self.net.channel(i, h_mean) for i in range(n)]
+        if bandwidth_policy == "optimal":
+            self.bw = weighted_equal_rate_allocation(self.eta, mean_chans,
+                                                     wl.total_bandwidth_hz)
+        elif bandwidth_policy == "equal":
+            self.bw = np.full(n, wl.total_bandwidth_hz / n)
+        else:
+            raise ValueError(f"unknown bandwidth policy {bandwidth_policy!r}")
+        self._fl, self._mode, self._n = fl, mode, n
+        self.server: Optional[SemiSyncServer] = None
+
+    # --- protocol ------------------------------------------------------
+    def make_servers(self, params0) -> None:
+        fl = self._fl
+        self.server = SemiSyncServer(params0, ServerConfig(
+            n_ues=self._n, participants_per_round=fl.participants_per_round,
+            staleness_bound=fl.staleness_bound, beta=fl.beta,
+            mode=self._mode, staleness_discount=fl.staleness_discount))
+
+    def rounds_done(self) -> int:
+        return self.server.round
+
+    def need(self, cell: int) -> int:
+        return self.server.arrivals_until_round()
+
+    def participants(self, cell: int) -> int:
+        return self.server.a
+
+    def on_arrival(self, cell, ue, payload):
+        return self.server.on_arrival(ue, payload)
+
+    def on_round_batch(self, cell, ues, aggregate_fn):
+        return self.server.on_round_batch(ues, aggregate_fn)
+
+    def protocol(self):
+        return self.server
 
 
 def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
@@ -87,194 +105,11 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
             eval_every=eval_every, eval_clients=eval_clients, seed=seed,
             name=name, verbose=verbose, payload_mode=payload_mode,
             engine=engine)
-    fl = cfg.fl
-    n = len(clients)
-    max_rounds = max_rounds or fl.rounds
-    rng = np.random.default_rng(seed)
-    # one independent key per consumer (init / payloads / evals)
-    init_key, payload_key, eval_key = jax.random.split(
-        jax.random.PRNGKey(seed), 3)
-
-    # --- network + η + static bandwidth allocation -------------------------
-    policy = get_policy(fl.eta_mode)
-    net = EdgeNetwork.drop(cfg.wireless, n, seed=seed,
-                           uniform_distance=policy.uniform_drop)
-    eta = policy.frequencies(n, net)
-
-    h_mean = cfg.wireless.rayleigh_scale * float(np.sqrt(np.pi / 2))
-    mean_chans = [net.channel(i, h_mean) for i in range(n)]
-    if bandwidth_policy == "optimal":
-        bw = weighted_equal_rate_allocation(eta, mean_chans,
-                                            cfg.wireless.total_bandwidth_hz)
-    elif bandwidth_policy == "equal":
-        bw = np.full(n, cfg.wireless.total_bandwidth_hz / n)
-    else:
-        raise ValueError(f"unknown bandwidth policy {bandwidth_policy!r}")
-
-    # --- model / engine -----------------------------------------------------
-    params0 = model.init(init_key)
-    z_bits = cfg.wireless.grad_bits or model_bits(
-        params0, cfg.wireless.bits_per_param)
-    engine = ensure_engine(engine, model, fl, algorithm=algorithm,
-                           payload_mode=payload_mode)
-    # snapshot so SimResult reports THIS run's dispatch counts even when the
-    # engine (and its lifetime counters) is shared across a sweep
-    disp0, pay0 = engine.dispatches, engine.payloads_computed
-    # per-UE inner learning rates α_i (paper §II-B: "easily extended to the
-    # general case when UEs have diverse learning rate α_i")
-    if fl.alpha_spread > 0:
-        s = 1.0 + fl.alpha_spread
-        alphas = fl.alpha * np.exp(rng.uniform(-np.log(s), np.log(s), size=n))
-    else:
-        alphas = np.full(n, fl.alpha)
-
-    server = SemiSyncServer(params0, ServerConfig(
-        n_ues=n, participants_per_round=fl.participants_per_round,
-        staleness_bound=fl.staleness_bound, beta=fl.beta, mode=mode,
-        staleness_discount=fl.staleness_discount))
-
-    # --- per-UE state -------------------------------------------------------
-    held_params: List[Any] = [params0 for _ in range(n)]
-    d_i = np.array([min(fl.inner_batch + fl.outer_batch + fl.hessian_batch,
-                        len(c)) for c in clients])
-    busy_time = np.zeros(n)
-    # batch shapes are a pure function of the shard size; a round whose UEs
-    # share one signature can take the fused path, mixed rounds fall back to
-    # bucketed payloads (rule lives on ClientDataset, next to the sampler)
-    batch_sig = [c.triplet_sizes(fl.inner_batch, fl.outer_batch,
-                                 fl.hessian_batch) for c in clients]
-
-    def cycle_duration(i: int) -> float:
-        h = float(net.sample_fading()[i])
-        tcmp = compute_time(cfg.wireless.cpu_cycles_per_sample, int(d_i[i]),
-                            float(net.cpu_freq[i]))
-        tcom = upload_time(z_bits, float(bw[i]), net.channel(i, h))
-        return tcmp + tcom
-
-    # --- eval ----------------------------------------------------------------
-    eval_idx = rng.choice(n, size=min(eval_clients, n), replace=False)
-
-    def evaluate(params, k: int) -> Tuple[float, float, float]:
-        r = jax.random.fold_in(eval_key, k)
-        pl, gl, ac = [], [], []
-        for ci in eval_idx:
-            c = clients[ci]
-            r, sub = jax.random.split(r)
-            batches = {"inner": c.sample(fl.inner_batch),
-                       "outer": {k2: v for k2, v in c.test.items()}}
-            p, g, a = engine.eval_one(params, batches, sub)
-            pl.append(float(p)); gl.append(float(g)); ac.append(float(a))
-        acc = (float(np.nanmean(ac))
-               if np.any(np.isfinite(ac)) else float("nan"))
-        return float(np.mean(pl)), float(np.mean(gl)), acc
-
-    # --- event loop ----------------------------------------------------------
-    # epoch-based lazy cancellation: when the server re-distributes to a UE
-    # whose upload is still in flight (τ > S forced refresh, Alg. 1 line 13),
-    # the UE ABANDONS the stale computation and restarts — the old event is
-    # dropped at pop time if its epoch is outdated.
-    heap: List[Tuple[float, int, int, int, float, int]] = []
-    epoch = np.zeros(n, dtype=np.int64)
-    seq = 0
-    for i in range(n):
-        dur = cycle_duration(i)
-        heapq.heappush(heap, (dur, seq, i, 0, dur, 0))
-        seq += 1
-
-    times, plosses, glosses, accs, rounds_at = [], [], [], [], []
-    t_now = 0.0
-    do_eval = eval_every > 0            # 0 → pure-throughput mode, no evals
-
-    if do_eval:
-        p0, g0, a0 = evaluate(params0, 0)
-        times.append(0.0); plosses.append(p0); glosses.append(g0)
-        accs.append(a0); rounds_at.append(0)
-
-    while server.round < max_rounds and heap:
-        # ---- drain one round's worth of arrivals ---------------------------
-        # The server advances only on its (A − pending)-th upload; until then
-        # no distribution happens, so no epoch can change and no new event
-        # can precede the ones already queued — the next `need` epoch-valid
-        # pops are exactly the arrivals the sequential loop would process,
-        # and their payloads are all computable now, as one batch.
-        need = server.arrivals_until_round()
-        batch: List[Tuple[float, int, int, float]] = []  # (t, ue, seq, dur)
-        while heap and len(batch) < need:
-            t, sq, ue, _version, dur, ev_epoch = heapq.heappop(heap)
-            if ev_epoch != epoch[ue]:
-                continue                # abandoned (stale-refresh) cycle
-            batch.append((t, ue, sq, dur))
-        if not batch:
-            break
-
-        held = [held_params[ue] for _, ue, _, _ in batch]
-        triplets = [clients[ue].sample_triplet(fl.inner_batch, fl.outer_batch,
-                                               fl.hessian_batch)
-                    for _, ue, _, _ in batch]
-        a_i = [alphas[ue] for _, ue, _, _ in batch]
-
-        def handle(result) -> None:
-            nonlocal seq
-            for i in result["distribute"]:
-                held_params[i] = result["params"]
-                epoch[i] += 1           # cancels any in-flight computation
-                dur_i = cycle_duration(i)
-                heapq.heappush(heap, (t_now + dur_i, seq, i, result["round"],
-                                      dur_i, int(epoch[i])))
-                seq += 1
-            k = result["round"]
-            if do_eval and (k % eval_every == 0 or k == max_rounds):
-                p, g, a = evaluate(result["params"], k)
-                times.append(t_now); plosses.append(p); glosses.append(g)
-                accs.append(a); rounds_at.append(k)
-                if verbose:
-                    print(f"[{name or algorithm}-{mode}] round {k:4d} "
-                          f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
-
-        if (engine.payload_mode == "batched" and len(batch) == server.a
-                and server.a <= engine.max_bucket
-                and len({batch_sig[ue] for _, ue, _, _ in batch}) == 1):
-            # fused fast path: the whole round — per-arrival RNG, vmapped
-            # payloads, Eq. (8) stale aggregation — fuses into one device
-            # dispatch per model-version group
-            for t, ue, _sq, dur in batch:
-                t_now = t
-                busy_time[ue] += dur    # only completed cycles count as busy
-
-            def aggregate(params, weights):
-                return engine.round_update(
-                    params, held, triplets, [sq for _, _, sq, _ in batch],
-                    a_i, weights, beta=fl.beta, base_key=payload_key)
-
-            handle(server.on_round_batch([ue for _, ue, _, _ in batch],
-                                         aggregate))
-        else:
-            payloads = engine.compute_payloads(
-                held, triplets,
-                [jax.random.fold_in(payload_key, sq)
-                 for _, _, sq, _ in batch],
-                a_i)
-            # ---- feed the server in arrival order --------------------------
-            for (t, ue, _sq, dur), payload in zip(batch, payloads):
-                t_now = t
-                busy_time[ue] += dur    # only completed cycles count as busy
-                result = server.on_arrival(ue, payload)
-                if result is not None:
-                    handle(result)
-
-    # drain the async dispatch queue so wall-clock timings of this function
-    # include all device work it issued (jit dispatch is asynchronous)
-    jax.block_until_ready(jax.tree.leaves(server.params))
-
-    wait_frac = float(1.0 - busy_time.sum() / max(n * t_now, 1e-9))
-    return SimResult(
-        name=name or f"{algorithm}-{mode}",
-        times=np.array(times), losses=np.array(plosses),
-        global_losses=np.array(glosses), accs=np.array(accs),
-        rounds=np.array(rounds_at), total_time=t_now,
-        pi=server.pi_matrix(), eta_target=eta,
-        eta_realised=server.realised_eta(),
-        wait_fraction=max(wait_frac, 0.0),
-        payload_dispatches=engine.dispatches - disp0,
-        payloads_computed=engine.payloads_computed - pay0,
-    )
+    adapter = StaticAdapter(cfg, len(clients), seed=seed,
+                            bandwidth_policy=bandwidth_policy, mode=mode)
+    return run_event_loop(cfg, model, clients, adapter,
+                          algorithm=algorithm, mode=mode,
+                          max_rounds=max_rounds, eval_every=eval_every,
+                          eval_clients=eval_clients, seed=seed, name=name,
+                          verbose=verbose, payload_mode=payload_mode,
+                          engine=engine)

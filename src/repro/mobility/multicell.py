@@ -145,6 +145,13 @@ class MultiCellNetwork:
         return self.rng.rayleigh(scale=self.cfg.rayleigh_scale,
                                  size=self.n_ues)
 
+    def sample_fading_batch(self, k: int) -> np.ndarray:
+        """``k`` successive fading draws as one ``[k, n]`` main-stream RNG
+        call — bitwise identical to the loop (see
+        ``EdgeNetwork.sample_fading_batch``)."""
+        return self.rng.rayleigh(scale=self.cfg.rayleigh_scale,
+                                 size=(k, self.n_ues))
+
     def channel(self, ue: int, h: Optional[float] = None) -> UEChannel:
         hval = float(h) if h is not None else float(self.sample_fading()[ue])
         return make_channel(self.cfg, self._dist[ue], hval)

@@ -15,8 +15,25 @@ from repro.config import WirelessConfig
 from repro.core.bandwidth import UEChannel
 
 
-def _noise_w_per_hz(n0_dbm_per_hz: float) -> float:
+def noise_w_per_hz(n0_dbm_per_hz: float) -> float:
     return 10.0 ** (n0_dbm_per_hz / 10.0) / 1000.0
+
+
+_noise_w_per_hz = noise_w_per_hz      # historical private alias
+
+
+def pathloss_pow(distances: np.ndarray, kappa: float) -> np.ndarray:
+    """``d^{−κ}`` per UE, computed with *python-scalar* pow.
+
+    ``UEChannel.q`` evaluates ``dist ** (-kappa)`` on python floats; numpy's
+    vectorized pow differs from libm's scalar pow by 1 ulp on a few percent
+    of inputs, which would break the bitwise-reproduction pins on the event
+    loop.  Distances only change when mobility re-associates, so the driver
+    caches this per distances-array and the scalar loop stays off the
+    per-requeue hot path.
+    """
+    return np.array([float(x) ** (-kappa) for x in np.asarray(distances)],
+                    dtype=np.float64)
 
 
 def make_channel(cfg: WirelessConfig, dist: float, h: float) -> UEChannel:
@@ -73,6 +90,14 @@ class EdgeNetwork:
         scale parameter 40)."""
         return self.rng.rayleigh(scale=self.cfg.rayleigh_scale,
                                  size=self.n_ues)
+
+    def sample_fading_batch(self, k: int) -> np.ndarray:
+        """``k`` successive ``sample_fading()`` draws as ONE ``[k, n]`` RNG
+        call — bitwise identical to the loop (numpy Generators fill arrays
+        from the bitstream in C order), at a fraction of the call overhead.
+        The unified driver prices a whole requeue per draw this way."""
+        return self.rng.rayleigh(scale=self.cfg.rayleigh_scale,
+                                 size=(k, self.n_ues))
 
     def channel(self, ue: int, h: Optional[float] = None) -> UEChannel:
         hval = float(h) if h is not None else float(self.sample_fading()[ue])

@@ -3,6 +3,12 @@
 * ``compute_time``  Tcmp = c_i·d_i / ϑ_i         (Eq. 11)
 * ``upload_time``   Tcom = Z / r_k^i             (Eq. 10), Z in bits
 * ``round_time``    T_k  = max over scheduled UEs (C1.1)
+
+``compute_times`` / ``upload_times`` are the vectorized counterparts used by
+the unified event-loop driver (``fl/driver.py``) to price a whole requeue of
+UEs in one shot.  They apply the exact same sequence of IEEE-754 operations
+as the scalar forms, so a batched requeue is *bitwise identical* to the
+legacy per-UE loop (pinned by ``tests/test_driver.py``).
 """
 from __future__ import annotations
 
@@ -25,6 +31,31 @@ def upload_time(z_bits: float, bandwidth_hz: float, ch: UEChannel) -> float:
     if r <= 0:
         return float("inf")
     return z_bits * LN2 / r
+
+
+def compute_times(cycles_per_sample: float, n_samples: np.ndarray,
+                  cpu_freq_hz: np.ndarray) -> np.ndarray:
+    """Vectorized Eq. (11): ``c·d_i / ϑ_i`` per UE — same op order as
+    ``compute_time`` (multiply, then divide), hence bitwise identical."""
+    return cycles_per_sample * np.asarray(n_samples) \
+        / np.asarray(cpu_freq_hz, dtype=np.float64)
+
+
+def upload_times(z_bits: float, bandwidth_hz: np.ndarray,
+                 q: np.ndarray) -> np.ndarray:
+    """Vectorized Eq. (10) over per-UE bandwidths and SNR numerators.
+
+    ``q`` is ``UEChannel.q`` per UE (p·h·d^{−κ}/N₀); the rate expression is
+    the same ufunc chain ``b·log1p(q/max(b, ε))`` that ``uplink_rate``
+    applies to a scalar, so every lane is bitwise identical to the scalar
+    path.  Non-positive rates yield +inf, matching ``upload_time``.
+    """
+    b = np.asarray(bandwidth_hz, dtype=np.float64)
+    r = b * np.log1p(np.asarray(q, dtype=np.float64)
+                     / np.maximum(b, 1e-12))
+    out = np.full_like(r, np.inf)
+    np.divide(z_bits * LN2, r, out=out, where=r > 0)
+    return out
 
 
 def round_time(times: np.ndarray) -> float:

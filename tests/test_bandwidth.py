@@ -8,7 +8,7 @@ except ImportError:                       # clean container (tier-1)
 
 from repro.core.bandwidth import (UEChannel, bandwidth_for_rate,
                                   bandwidth_for_time, equal_finish_allocation,
-                                  lambertw, uplink_rate,
+                                  lambertw, theorem4_lower_bound, uplink_rate,
                                   weighted_equal_rate_allocation)
 
 N0 = 10 ** (-174.0 / 10.0) / 1000.0
@@ -54,7 +54,8 @@ def test_equal_finish_times_theorem2():
     z = [4e5, 4e5, 4e5]
     tc = [0.05, 0.15, 0.30]
     chans = [_ch(40, 50), _ch(25, 120), _ch(15, 180)]
-    b, t_star = equal_finish_allocation(z, tc, chans, 1e6)
+    b, t_star, converged = equal_finish_allocation(z, tc, chans, 1e6)
+    assert converged
     assert abs(b.sum() - 1e6) / 1e6 < 1e-6
     finish = [tc[i] + z[i] * np.log(2) / uplink_rate(b[i], chans[i])
               for i in range(3)]
@@ -67,7 +68,7 @@ def test_equal_finish_beats_equal_split():
     z = [4e5] * 3
     tc = [0.05, 0.1, 0.2]
     chans = [_ch(40, 50), _ch(25, 120), _ch(15, 180)]
-    _, t_opt = equal_finish_allocation(z, tc, chans, 1e6)
+    _, t_opt, _ = equal_finish_allocation(z, tc, chans, 1e6)
     b_eq = 1e6 / 3
     t_eq = max(tc[i] + z[i] * np.log(2) / uplink_rate(b_eq, chans[i])
                for i in range(3))
@@ -97,3 +98,38 @@ def test_weighted_equal_rate_allocation():
 def test_infeasible_time_returns_inf():
     ch = _ch()
     assert bandwidth_for_time(1e6, 0.05, 0.1, ch) == float("inf")
+
+
+def test_equal_finish_surfaces_nonconvergence():
+    """max_iter too small → the silent simplex rescale used to hide that
+    the returned b no longer equalises finish times; now converged=False."""
+    z = [4e5, 4e5, 4e5]
+    tc = [0.05, 0.15, 0.30]
+    chans = [_ch(40, 50), _ch(25, 120), _ch(15, 180)]
+    res = equal_finish_allocation(z, tc, chans, 1e6, max_iter=1)
+    assert not res.converged
+    assert abs(res.b.sum() - 1e6) / 1e6 < 1e-6    # still on the simplex
+    ok = equal_finish_allocation(z, tc, chans, 1e6)
+    assert ok.converged
+
+
+@given(st.floats(0.2, 0.9), st.floats(5.0, 150.0), st.floats(20.0, 180.0),
+       st.floats(0.05, 1.0))
+@settings(max_examples=60, deadline=None)
+def test_theorem4_lower_bound_matches_gamma_closed_form(t, h, d, eta_i):
+    """The simplified Γ form is η_i · b(Z/t_com) with b the Theorem-4
+    closed-form bandwidth (``bandwidth_for_rate``); the old version
+    multiplied *and divided* by total_bw·n_ues around the same quantity."""
+    ch = _ch(h, d)
+    z, tcmp = 4e5, 0.05
+    t_com = t - tcmp
+    want_b = bandwidth_for_rate(z / t_com, ch)
+    got = theorem4_lower_bound(z, t, tcmp, ch, eta_i)
+    if not np.isfinite(want_b):
+        assert got == float("inf")
+    else:
+        assert abs(got - eta_i * want_b) <= 1e-9 * max(abs(got), 1.0)
+
+
+def test_theorem4_lower_bound_infeasible():
+    assert theorem4_lower_bound(4e5, 0.05, 0.1, _ch(), 0.5) == float("inf")

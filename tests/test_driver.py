@@ -1,0 +1,221 @@
+"""Unified event-loop driver: golden-trajectory pins, batched requeue
+pricing, and the handover-arrival routing / stale-drain regression tests.
+
+The goldens were captured from the pre-unification ``fl/simulation.py``
+loop (PR 2 tree) — wall-clock times are pure host-side float64 event math,
+so they are pinned *bitwise* (hex); losses go through jax and are pinned to
+float32-level tolerance.  If these fail, the driver changed the trajectory
+of the static path, which the refactor contract forbids.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.config import (ExperimentConfig, FLConfig, MobilityConfig,
+                          WirelessConfig)
+from repro.configs import get_config
+from repro.data import partition_noniid, synthetic_mnist
+from repro.fl.driver import make_cycle_duration_fn
+from repro.fl.simulation import run_simulation
+from repro.mobility.multicell import MultiCellNetwork
+from repro.models import build_model
+from repro.wireless.channel import EdgeNetwork
+from repro.wireless.timing import model_bits
+
+_DATA = synthetic_mnist(n=600, seed=21)
+_MODEL = build_model(get_config("mnist_dnn"))
+
+
+def _cfg(n=8, a=3, s=3, **fl_kw):
+    return ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        fl=FLConfig(n_ues=n, participants_per_round=a, staleness_bound=s,
+                    alpha=0.03, beta=0.07, inner_batch=8, outer_batch=8,
+                    hessian_batch=8, **fl_kw))
+
+
+def _clients(n=8, seed=0):
+    return partition_noniid(_DATA, n, l=4, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# golden pre-refactor trajectories (bitwise on host math)
+# ---------------------------------------------------------------------------
+
+def test_static_trajectory_matches_pre_refactor_golden():
+    res = run_simulation(_cfg(), _MODEL, _clients(), algorithm="perfed",
+                         mode="semi", max_rounds=6, eval_every=2, seed=0)
+    assert [float(t).hex() for t in res.times] == [
+        "0x0.0p+0", "0x1.b877293c2d615p-1",
+        "0x1.ae97a23acc733p+0", "0x1.4066315c4298cp+1"]
+    assert float(res.total_time).hex() == "0x1.4066315c4298cp+1"
+    assert float(res.wait_fraction).hex() == "0x1.f2da4241021f8p-3"
+    assert res.pi.tolist() == [
+        [1, 0, 0, 1, 0, 0, 0, 1], [0, 0, 1, 0, 0, 1, 1, 0],
+        [0, 1, 0, 0, 1, 0, 0, 1], [1, 0, 1, 1, 0, 0, 0, 0],
+        [0, 0, 0, 0, 0, 1, 1, 1], [0, 1, 1, 0, 1, 0, 0, 0]]
+    assert res.rounds.tolist() == [0, 2, 4, 6]
+    # the engine's one-dispatch-per-version-group fast path must be intact
+    assert res.payload_dispatches == 8
+    assert res.payloads_computed == 18
+    np.testing.assert_allclose(res.losses, [
+        2.3583488166332245, 1.8240666687488556,
+        1.4705257415771484, 1.1463348343968391], rtol=1e-6)
+    np.testing.assert_allclose(res.global_losses, [
+        2.7490968108177185, 2.1383248418569565,
+        1.7266773730516434, 1.365978181362152], rtol=1e-6)
+
+
+def test_static_sequential_distance_eta_matches_pre_refactor_golden():
+    cfg = _cfg(n=6, a=2, s=2, eta_mode="distance")
+    res = run_simulation(cfg, _MODEL, _clients(6, seed=4),
+                         algorithm="fedavg", mode="semi", max_rounds=4,
+                         eval_every=2, seed=4, bandwidth_policy="equal",
+                         payload_mode="sequential")
+    assert [float(t).hex() for t in res.times] == [
+        "0x0.0p+0", "0x1.82c4cb3f67704p-1", "0x1.6ccf9ab27fc2cp+0"]
+    assert res.pi.tolist() == [
+        [0, 1, 0, 1, 0, 0], [0, 0, 1, 0, 0, 1],
+        [1, 0, 0, 0, 1, 0], [0, 0, 0, 1, 0, 1]]
+    assert res.payload_dispatches == 8 and res.payloads_computed == 8
+    np.testing.assert_allclose(res.losses, [
+        2.046475092569987, 1.5647791028022766, 1.0200251936912537],
+        rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# batched requeue pricing ≡ legacy per-UE scalar loop, bitwise
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_batched_cycle_durations_bitwise_equal_legacy(seed):
+    from benchmarks.requeue import PricingShim, legacy_durations
+
+    wl = WirelessConfig()
+    n = 64
+    net_a = EdgeNetwork.drop(wl, n, seed=seed)
+    net_b = EdgeNetwork.drop(wl, n, seed=seed)
+    bw = np.full(n, wl.total_bandwidth_hz / n)
+    d_i = np.full(n, 24)
+    params = _MODEL.init(__import__("jax").random.PRNGKey(0))
+    z_bits = model_bits(params)
+    fn = make_cycle_duration_fn(PricingShim(net_a, bw), wl, z_bits, d_i)
+    rng = np.random.default_rng(3)
+    for k in (n, 5, 1, 17):              # initial fill + assorted requeues
+        ues = rng.choice(n, size=k, replace=False)
+        got = fn(ues)
+        want = legacy_durations(net_b, wl, bw, d_i, z_bits, ues)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_batched_cycle_durations_track_moving_distances(seed=0):
+    """When the distances array is replaced (moving mobility does this on
+    every advance), the pricing must use the NEW distances — and keep the
+    legacy per-UE scalar-pow cost rather than rebuilding an O(n) cache."""
+    from benchmarks.requeue import PricingShim, legacy_durations
+
+    wl = WirelessConfig()
+    n = 32
+    net_a = EdgeNetwork.drop(wl, n, seed=seed)
+    net_b = EdgeNetwork.drop(wl, n, seed=seed)
+    bw = np.full(n, wl.total_bandwidth_hz / n)
+    d_i = np.full(n, 24)
+    fn = make_cycle_duration_fn(PricingShim(net_a, bw), wl, 1e6, d_i)
+    rng = np.random.default_rng(1)
+    for step in range(4):                # replace distances between requeues
+        if step:
+            moved = np.maximum(net_a.distances * (1.0 + 0.1 * step), 5.0)
+            net_a.distances = moved
+            net_b.distances = moved.copy()
+        ues = rng.choice(n, size=6, replace=False)
+        got = fn(ues)
+        want = legacy_durations(net_b, wl, bw, d_i, 1e6, ues)
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# handover-arrival routing + stale-drain regressions
+# ---------------------------------------------------------------------------
+
+def _mobile_cfg(n=8):
+    # eta_mode="distance" keeps the geometric (non-uniform) drop: with
+    # seed 0, cell 0 holds two UEs, so moving one away still lets cell 0
+    # close rounds of A=2 (the second arrival being the departed upload)
+    return dataclasses.replace(
+        _cfg(n=n, a=4, s=6, first_order=True, eta_mode="distance"),
+        mobility=MobilityConfig(enabled=True, model="static", speed_mps=0.0,
+                                n_cells=2, hierarchy=True,
+                                cell_participants=2, cloud_sync_every=0))
+
+
+def _patch_forced_handover(monkeypatch, *, fire_on_call: int):
+    """Inject one cell-0 → cell-1 handover on the Nth ``advance_to`` call
+    (the driver advances once per heap pop, so N=2 lands *between two pops
+    of the same drain*).  Returns the shared state dict."""
+    state = {"calls": 0, "moved": None}
+    orig = MultiCellNetwork.advance_to
+
+    def patched(self, t):
+        events = orig(self, t)
+        state["calls"] += 1
+        if state["moved"] is None and state["calls"] >= fire_on_call:
+            members = np.nonzero(self.assoc == 0)[0]
+            if len(members) > 1:         # keep cell 0 able to close rounds
+                u = int(members[0])
+                self.assoc[u] = 1
+                self.handovers += 1
+                state["moved"] = u
+                events = events + [(u, 0, 1)]
+        return events
+
+    monkeypatch.setattr(MultiCellNetwork, "advance_to", patched)
+    return state
+
+
+def test_inflight_upload_routes_to_dispatching_cell(monkeypatch):
+    """A UE that hands over while its upload is in flight must deliver that
+    upload to the *source* cell (whose round it was computed against) via
+    the departed-UE path — which pop-time association routing made dead."""
+    state = _patch_forced_handover(monkeypatch, fire_on_call=1)
+    res = run_simulation(_mobile_cfg(), _MODEL, _clients(), algorithm="perfed",
+                         mode="semi", bandwidth_policy="equal", max_rounds=8,
+                         eval_every=0, seed=0, payload_mode="sequential")
+    assert state["moved"] is not None and res.handovers >= 1
+    # the moved UE's in-flight upload arrived at cell 0 after the handover:
+    # HierarchicalServer counted it through the departed-UE branch
+    assert res.departed_arrivals >= 1
+    assert res.pi.shape[0] == 8
+    # liveness: the departed upload earns no redistribution from the source
+    # cell, so the driver must restart the UE against its held model — it
+    # participates again (in its NEW cell) instead of idling until τ > S
+    assert res.pi[:, state["moved"]].sum() >= 2
+
+
+def test_mid_drain_handover_keeps_round_accounting_exact(monkeypatch):
+    """A handover *between two pops of the same drain* must not skew the
+    per-cell arrival counting: every completed round still has exactly its
+    cell's A arrivals, and the run closes all requested rounds.  (Events
+    carry their dispatch cell, and ``need`` depends only on pending-upload
+    counts, which mid-drain handovers never touch.)"""
+    state = _patch_forced_handover(monkeypatch, fire_on_call=2)
+    res = run_simulation(_mobile_cfg(), _MODEL, _clients(), algorithm="perfed",
+                         mode="semi", bandwidth_policy="equal", max_rounds=6,
+                         eval_every=0, seed=0)
+    assert state["moved"] is not None
+    assert res.pi.shape[0] == 6                  # all rounds closed
+    np.testing.assert_array_equal(res.pi.sum(1), np.full(6, 2))
+    assert np.isfinite(res.total_time)
+
+
+def test_degenerate_mobile_adapter_stays_bitwise_static():
+    """Belt-and-braces on top of tests/test_mobility.py: the degenerate
+    mobile configuration rides the same unified loop as the static path and
+    must hit the same golden, bitwise on host math."""
+    degen = dataclasses.replace(_cfg(), mobility=MobilityConfig(
+        enabled=True, speed_mps=0.0, n_cells=1, hierarchy=False))
+    res = run_simulation(degen, _MODEL, _clients(), algorithm="perfed",
+                         mode="semi", max_rounds=6, eval_every=2, seed=0)
+    assert float(res.total_time).hex() == "0x1.4066315c4298cp+1"
+    assert res.payload_dispatches == 8
+    assert res.departed_arrivals == 0

@@ -10,6 +10,7 @@ from repro.config import FLConfig
 from repro.core.scheduler import (estimate_A_K, greedy_schedule,
                                   relative_frequencies, schedule_period,
                                   schedule_staleness)
+from repro.core.server import SemiSyncServer, ServerConfig
 
 
 @st.composite
@@ -88,3 +89,46 @@ def test_every_ue_eventually_scheduled(n, a):
     eta = relative_frequencies(n, "equal")
     pi = greedy_schedule(eta, a, 4 * n)
     assert (pi.sum(0) > 0).all()
+
+
+@st.composite
+def feasible_eta_and_A(draw):
+    """η with every η_i ≤ 1/A (a UE participates at most once per round,
+    so only such targets are attainable): raw weights in [0.5, 1.5] give
+    η_i ≤ 3/n, and A ≤ n/3 gives 1/A ≥ 3/n."""
+    n = draw(st.integers(6, 24))
+    a = draw(st.integers(1, n // 3))
+    raw = draw(st.lists(st.floats(0.5, 1.5), min_size=n, max_size=n))
+    eta = np.array(raw) / np.sum(raw)
+    return eta, a
+
+
+@given(feasible_eta_and_A())
+@settings(max_examples=30, deadline=None)
+def test_realised_eta_converges_to_feasible_target(case):
+    """Algorithm 2's whole point (Eq. 15): over a long horizon the realised
+    participation frequencies converge to the feasible target η."""
+    eta, a = case
+    k = 500
+    pi = greedy_schedule(eta, a, k)
+    realised = pi.sum(0) / (a * k)
+    assert np.max(np.abs(realised - eta)) < 2.0 / k + 1e-9
+
+
+def test_schedule_staleness_matches_server_staleness():
+    """``schedule_staleness(Π)`` must agree with what ``SemiSyncServer``
+    actually tracks when the schedule is replayed through the protocol."""
+    eta = relative_frequencies(6, "equal")
+    pi = greedy_schedule(eta, 2, 12)
+    tau = schedule_staleness(pi)
+    payload = {"w": np.zeros(3, np.float32)}
+    srv = SemiSyncServer(payload, ServerConfig(
+        n_ues=6, participants_per_round=2, staleness_bound=10 ** 6,
+        beta=0.1))
+    for k in range(pi.shape[0]):
+        assert srv.round == k
+        scheduled = np.nonzero(pi[k])[0]
+        for i in scheduled:
+            assert srv.staleness(int(i)) == tau[k, i]
+        for i in scheduled:
+            srv.on_arrival(int(i), payload)
