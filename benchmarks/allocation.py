@@ -1,0 +1,175 @@
+"""Per-cell radio-resource allocation in the MOBILE loop: Theorem 2 vs equal.
+
+The static path has always benchmarked the Theorem-2 equal-finish bisection
+(``benchmarks/bandwidth.py``); this sweep measures what it buys *inside the
+mobile multi-cell loop*, where each cell re-solves the bisection over its
+current members on every membership change (warm-started from the cell's
+previous ``t_star``).  Sweeps bandwidth policy × per-cell budget mix ×
+UE speed at 1024 UEs and reports the mean **simulated round wall-clock**
+(total simulated time / edge rounds closed) plus host wall time per point.
+
+Two participation regimes per (mix, speed) point:
+
+* ``full``   — per-cell A = cell population (per-cell sync rounds): the
+  round ends when *every* member finishes, which is exactly the max the
+  Theorem-2 objective minimises — equal-finish should win outright.
+* ``sparse`` — per-cell A ≪ population (the semi-synchronous regime): the
+  round ends at the A-th *fastest* arrival, a different order statistic;
+  equalising all members can trade that tail in — the sweep records how
+  much, honestly, rather than only benchmarking the friendly regime.
+
+    PYTHONPATH=src python -m benchmarks.allocation            # full sweep
+    PYTHONPATH=src python benchmarks/allocation.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):          # run as a script, not -m
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+
+N_UES = 1024
+N_CELLS = 4
+SPEEDS = (0.0, 20.0)         # m/s: static, vehicular
+ROUNDS = 8                   # edge rounds per point
+POLICIES = ("equal", "theorem2")
+OUT_JSON = "BENCH_allocation.json"
+
+SMOKE_N_UES = 64
+SMOKE_N_CELLS = 2
+SMOKE_SPEEDS = (0.0,)
+SMOKE_ROUNDS = 4
+
+# per-cell budget mixes [Hz]; () = legacy: every cell owns the full B
+MIXES = {
+    "uniform": (),
+    # one 2-MHz macro + 0.5-MHz micros (the HPFL-style heterogeneous mix)
+    "macro_micro": lambda k: (2e6,) + (5e5,) * (k - 1),
+}
+
+
+def _setup(n_ues: int, seed: int = 0):
+    from repro.config import ExperimentConfig, FLConfig
+    from repro.configs import get_config
+    from repro.data import partition_noniid, synthetic_mnist
+    from repro.models import build_model
+
+    cfg = ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        # eta_mode="distance" keeps the geometric (non-uniform) drop: with
+        # the equal-η uniform ring every UE sits at R/2 and any bandwidth
+        # split is trivially equal-finish — there would be nothing to sweep
+        fl=FLConfig(n_ues=n_ues,
+                    participants_per_round=max(1, n_ues // 16),
+                    staleness_bound=8, alpha=0.03, beta=0.07,
+                    first_order=True, eta_mode="distance",
+                    inner_batch=4, outer_batch=4, hessian_batch=4))
+    model = build_model(cfg.model)
+    data = synthetic_mnist(n=max(2500, 10 * n_ues), seed=seed)
+    return cfg, model, data
+
+
+def _point(cfg, model, data, *, policy: str, mix: str, speed: float,
+           regime: str, n_cells: int, n_ues: int, rounds: int,
+           association: str = "nearest") -> dict:
+    import dataclasses
+
+    from repro.config import MobilityConfig
+    from repro.data import partition_noniid
+    from repro.fl.simulation import run_simulation
+
+    budgets = MIXES[mix]
+    if callable(budgets):
+        budgets = budgets(n_cells)
+    # full: per-cell sync (A = cell population, capped by the adapter);
+    # sparse: the default ceil(A / n_cells) split of the flat A
+    cell_a = n_ues if regime == "full" else 0
+    mcfg = MobilityConfig(
+        enabled=True, model="random_waypoint", speed_mps=speed,
+        n_cells=n_cells, hierarchy=True, cloud_sync_every=4,
+        cell_participants=cell_a, cell_bandwidth_hz=budgets,
+        association=association)
+    run_cfg = dataclasses.replace(cfg, mobility=mcfg)
+    clients = partition_noniid(data, n_ues, l=4, seed=0)  # fresh RNG per run
+    t0 = time.perf_counter()
+    res = run_simulation(run_cfg, model, clients, algorithm="perfed",
+                         mode="semi", bandwidth_policy=policy,
+                         max_rounds=rounds, eval_every=0, seed=0)
+    wall = time.perf_counter() - t0
+    completed = int(res.pi.shape[0])
+    return {"policy": policy, "mix": mix, "speed_mps": speed,
+            "regime": regime, "association": association,
+            "n_cells": n_cells,
+            "rounds": completed,
+            "sim_round_s": res.total_time / max(completed, 1),
+            "sim_time_s": res.total_time,
+            "wall_s": wall,
+            "handovers": res.handovers}
+
+
+def run(smoke: bool = False) -> None:
+    n_ues = SMOKE_N_UES if smoke else N_UES
+    n_cells = SMOKE_N_CELLS if smoke else N_CELLS
+    speeds = SMOKE_SPEEDS if smoke else SPEEDS
+    rounds = SMOKE_ROUNDS if smoke else ROUNDS
+    mixes = ("macro_micro",) if smoke else tuple(MIXES)
+    regimes = ("full",) if smoke else ("full", "sparse")
+
+    cfg, model, data = _setup(n_ues)
+    results = {"n_ues": n_ues, "n_cells": n_cells, "rounds": rounds,
+               "smoke": smoke, "sweep": []}
+
+    def add(pt: dict) -> None:
+        results["sweep"].append(pt)
+        emit(f"alloc/{pt['policy']}/{pt['mix']}/{pt['regime']}"
+             f"/v={pt['speed_mps']:g}/{pt['association']}",
+             pt["wall_s"] * 1e6 / max(pt["rounds"], 1),
+             f"sim_round_s={pt['sim_round_s']:.4f};"
+             f"handovers={pt['handovers']}")
+
+    for mix in mixes:
+        for regime in regimes:
+            for speed in speeds:
+                for policy in POLICIES:
+                    add(_point(cfg, model, data, policy=policy, mix=mix,
+                               speed=speed, regime=regime, n_cells=n_cells,
+                               n_ues=n_ues, rounds=rounds))
+    if not smoke:
+        # the association knob, quantified at the heterogeneous point
+        for assoc in ("nearest", "load_aware"):
+            add(_point(cfg, model, data, policy="theorem2",
+                       mix="macro_micro", speed=20.0, regime="sparse",
+                       n_cells=n_cells, n_ues=n_ues, rounds=rounds,
+                       association=assoc))
+
+    # headline: Theorem 2 vs equal split at matched (mix, regime, speed)
+    by_key = {}
+    for pt in results["sweep"]:
+        if pt["association"] != "nearest":
+            continue
+        key = (pt["mix"], pt["regime"], pt["speed_mps"])
+        by_key.setdefault(key, {})[pt["policy"]] = pt["sim_round_s"]
+    wins = 0
+    for key, d in sorted(by_key.items()):
+        if "equal" in d and "theorem2" in d:
+            x = d["equal"] / max(d["theorem2"], 1e-12)
+            wins += x > 1.0
+            emit(f"alloc/thm2_speedup/{key[0]}/{key[1]}/v={key[2]:g}", 0.0,
+                 f"x{x:.3f}")
+    assert wins >= 1, \
+        "theorem2 did not beat equal split at any matched sweep point"
+
+    out = "BENCH_allocation_smoke.json" if smoke else OUT_JSON
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -2,7 +2,11 @@
 
 Compares per-round completion time of (i) Theorem-2 equal-finish optimal,
 (ii) the Theorem-4 weighted-equal-rate extreme, (iii) naive equal split —
-and times the allocator itself (it runs in the simulator's round loop)."""
+and times the allocator itself (it runs in the simulator's round loop).
+
+Cheap enough to run as-is in CI: ``smoke=True`` runs the identical sweep
+(it IS the smoke size) so ``benchmarks.run --smoke bandwidth`` exercises
+the allocators on every PR instead of silently skipping them."""
 from __future__ import annotations
 
 import numpy as np
@@ -10,7 +14,7 @@ import numpy as np
 from benchmarks.common import emit, timed
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     from repro.config import WirelessConfig
     from repro.core.bandwidth import (equal_finish_allocation, uplink_rate,
                                       weighted_equal_rate_allocation)

@@ -45,6 +45,9 @@ class PricingShim:
     def __init__(self, net, bw):
         self.net, self.bw = net, bw
 
+    def bind_link_budget(self, z_bits, d_i):
+        pass
+
     def pre_requeue(self, ues):
         pass
 

@@ -26,6 +26,7 @@ SUITES = [
     "participants",      # Fig. 8/9 — A sweep
     "staleness",         # Fig. 10 — S sweep
     "bandwidth",         # Thm. 2/4 — allocation policies
+    "allocation",        # Thm. 2 inside the mobile loop: policy × mix × speed
     "fo_ablation",       # exact Eq.-7 HVP vs first-order variant
     "kernels",           # Pallas kernels vs oracles
     "engine_throughput", # batched vs sequential simulation engine

@@ -236,6 +236,15 @@ class MobilityConfig:
     hierarchy: bool = False              # per-cell edge servers + cloud tier
     cloud_sync_every: int = 5            # cloud merge every N edge rounds
     cell_participants: int = 0           # per-cell A (0 → ceil(A / n_cells))
+    # --- heterogeneous per-cell radio resources ------------------------
+    # per-BS uplink budget [Hz]: () → every cell owns the full
+    # wireless.total_bandwidth_hz (legacy); one value → broadcast to all
+    # cells; else one entry per cell (macro/micro mixes)
+    cell_bandwidth_hz: Tuple[float, ...] = ()
+    association: str = "nearest"         # nearest | load_aware
+    # load_aware: extra effective metres per unit of relative cell load
+    # (members / fair share, budget-normalised) — hot cells shed UEs
+    load_penalty_m: float = 50.0
 
 
 @dataclass(frozen=True)
@@ -320,7 +329,13 @@ def _coerce(raw: str, old: Any) -> Any:
     if isinstance(old, float):
         return float(raw)
     if isinstance(old, tuple):
-        return tuple(x.strip() for x in raw.split(","))
+        def elem(x: str) -> Any:
+            x = x.strip()
+            try:                         # numeric tuples (cell_bandwidth_hz)
+                return float(x)
+            except ValueError:           # string tuples (hybrid.pattern)
+                return x
+        return tuple(elem(x) for x in raw.split(",") if x.strip())
     return raw
 
 

@@ -16,7 +16,7 @@ simulator, not inside jit).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import NamedTuple, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -109,6 +109,43 @@ def bandwidth_for_time(z_bits: float, t: float, tcmp: float, ch: UEChannel,
     return bandwidth_for_rate(rate_nats, ch)
 
 
+def bandwidths_for_time(z_bits: np.ndarray, t: float, tcmp: np.ndarray,
+                        q: np.ndarray,
+                        bits_per_nat: float = 1.0 / np.log(2.0)
+                        ) -> np.ndarray:
+    """Vectorized ``bandwidth_for_time`` over the UEs of one round, with
+    ``q = p·h·d^{−κ}/N₀`` per UE precomputed (``UEChannel.q``).
+
+    Every lane is **bitwise identical** to the scalar form: the expression
+    applies the same float64 ufunc chain elementwise (numpy's f64 loops call
+    the same libm routines the scalar path does — unlike ``pow``, see
+    ``wireless.channel.pathloss_pow``), and the Lambert-W Halley iteration
+    is already elementwise.  This is what makes the Theorem-2 bisection
+    affordable inside the mobile loop's requeue at 1024 UEs
+    (``tests/test_bandwidth_properties.py`` pins the equivalence).
+    """
+    z = np.asarray(z_bits, dtype=np.float64)
+    tc = np.asarray(tcmp, dtype=np.float64)
+    q = np.asarray(q, dtype=np.float64)
+    t_com = t - tc
+    out = np.full(len(q), np.inf)
+    feas = t_com > 0
+    if not np.any(feas):
+        return out
+    rate = (z[feas] / bits_per_nat) / t_com[feas]  # required nats/s
+    c = rate / q[feas]
+    b = np.full(len(rate), np.inf)
+    b[c <= 0.0] = 0.0
+    mid = (c > 0.0) & (c < 1.0)
+    if np.any(mid):
+        cm = c[mid]
+        w = lambertw(-cm * np.exp(-cm), branch=-1)
+        u = -w / cm - 1.0
+        b[mid] = np.where(u > 0, q[feas][mid] / u, np.inf)
+    out[feas] = b
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Theorem 2: equal-finish-time allocation within a round
 # ---------------------------------------------------------------------------
@@ -130,26 +167,54 @@ class EqualFinishAllocation(NamedTuple):
 
 
 def equal_finish_allocation(z_bits: Sequence[float], tcmp: Sequence[float],
-                            channels: Sequence[UEChannel], total_bw: float,
-                            *, tol: float = 1e-9, max_iter: int = 200
+                            channels: Optional[Sequence[UEChannel]],
+                            total_bw: float,
+                            *, tol: float = 1e-9, max_iter: int = 200,
+                            t_hint: Optional[float] = None,
+                            q: Optional[np.ndarray] = None
                             ) -> EqualFinishAllocation:
     """Split ``total_bw`` among the scheduled UEs so all finish at the same
     time T* (Theorem 2).  Returns ``EqualFinishAllocation(b, t_star,
     converged)``.
 
     T ↦ Σ_i b_i(T) is strictly decreasing, so bisect on T.
+
+    ``t_hint`` warm-starts the bracket from a previous round's ``t_star``
+    (the mobile loop re-solves per cell on every membership change, and T*
+    drifts slowly between requeues): a feasible hint becomes the upper
+    bracket, an infeasible one the lower — either way the bisection starts
+    tight instead of doubling up from ``max(tcmp)``.  ``t_hint=None`` keeps
+    the cold-start bracket bit-for-bit.
+
+    Callers that already hold the per-UE SNR numerators may pass ``q``
+    (= ``UEChannel.q`` per UE, same scalar-pow path-loss convention) and
+    ``channels=None`` — the mobile loop's per-requeue realloc does, to skip
+    building a throwaway list of channel objects.
     """
     z = np.asarray(z_bits, dtype=np.float64)
     tc = np.asarray(tcmp, dtype=np.float64)
-    n = len(channels)
+    if q is None:
+        q = np.array([ch.q for ch in channels], dtype=np.float64)
+    else:
+        q = np.asarray(q, dtype=np.float64)
+    n = len(q)
     assert len(z) == len(tc) == n
 
     def need(t: float) -> float:
-        return sum(bandwidth_for_time(z[i], t, tc[i], channels[i])
-                   for i in range(n))
+        # cumsum[-1] is the same sequential left-to-right addition a
+        # python ``sum`` over the scalar calls performed (np.sum's pairwise
+        # reduction would differ in the last ulps), so vectorizing the
+        # bisection keeps t_star bit-for-bit
+        return float(np.cumsum(bandwidths_for_time(z, t, tc, q))[-1])
 
     lo = float(tc.max()) * (1.0 + 1e-9) + 1e-12
     hi = max(lo * 2.0, 1e-6)
+    if t_hint is not None and np.isfinite(t_hint) and t_hint > lo:
+        if need(float(t_hint)) > total_bw:
+            lo = float(t_hint)           # T* above the hint: raise the floor
+            hi = max(hi, lo * 2.0)
+        else:
+            hi = float(t_hint)           # T* at or below the hint: cap
     while need(hi) > total_bw and hi < 1e12:
         hi *= 2.0
     met_tol = False
@@ -163,8 +228,7 @@ def equal_finish_allocation(z_bits: Sequence[float], tcmp: Sequence[float],
             met_tol = True
             break
     t_star = hi
-    b = np.array([bandwidth_for_time(z[i], t_star, tc[i], channels[i])
-                  for i in range(n)])
+    b = bandwidths_for_time(z, t_star, tc, q)
     # numerical guard: scale onto the simplex Σb = B — and *say so* when the
     # scale is material (then b no longer equalises finish times at t_star)
     s = b.sum()

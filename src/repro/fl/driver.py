@@ -130,6 +130,13 @@ class TopologyAdapter:
         raise NotImplementedError
 
     # --- topology hooks (static topology: all no-ops) ------------------
+    def bind_link_budget(self, z_bits: float, d_i: np.ndarray) -> None:
+        """Called once by ``make_cycle_duration_fn`` with the payload size
+        Z [bits] and per-UE sample counts — the link-budget inputs a
+        Theorem-2 (equal-finish) bandwidth policy needs to price compute
+        times.  Adapters whose allocation ignores Z (equal split /
+        weighted-equal-rate) leave this a no-op."""
+
     def dispatch_cell(self, ue: int) -> int:
         """Cell stamped on a cycle's heap event at dispatch time; arrivals
         are routed back to this cell even if the UE hands over while the
@@ -162,6 +169,7 @@ def make_cycle_duration_fn(adapter: TopologyAdapter, wl, z_bits: float,
     ``_pathloss`` below).
     """
     net = adapter.net
+    adapter.bind_link_budget(z_bits, d_i)
     p, kappa = wl.tx_power_w, wl.path_loss_exp
     n0 = noise_w_per_hz(wl.noise_dbm_per_hz)
     cycles = wl.cpu_cycles_per_sample

@@ -7,10 +7,18 @@ both are thin configurations of ``fl.driver.run_event_loop``.  The
 * UE positions advance under a vectorized mobility model as simulated time
   passes, so path loss — and therefore upload times and the straggler
   population — is *time-varying* (``advance_to``).
-* Each UE associates with the nearest BS; handovers re-home it to the new
-  cell's scheduler and bandwidth budget (cells whose membership changed are
-  re-allocated lazily, at the next requeue that touches them —
-  ``pre_requeue``).
+* Each UE associates under ``mobility.association`` (pure nearest-BS, or
+  load-aware: distance plus a members-per-budget penalty so hot cells shed
+  UEs); handovers re-home it to the new cell's scheduler and bandwidth
+  budget (cells whose membership changed are re-allocated lazily, at the
+  next requeue that touches them — ``pre_requeue``).
+* Each cell owns its own uplink budget (``mobility.cell_bandwidth_hz``:
+  macro/micro mixes; unset → every cell owns the full system bandwidth)
+  and splits it per ``bandwidth_policy``: ``equal`` (even split over
+  members), ``optimal`` (Theorem-4 weighted-equal-rate), or ``theorem2``
+  (the paper's per-round equal-finish bisection over the cell's current
+  members, warm-started from the cell's previous ``t_star`` — previously
+  only the static path's benchmarks ran it).
 * With ``mobility.hierarchy`` on, each cell runs its own semi-synchronous
   edge server (Eq. 8 via the engine's fused ``stale_aggregate_tree`` path)
   and a cloud tier merges cell models every ``cloud_sync_every`` edge
@@ -38,7 +46,8 @@ from typing import List, Optional
 import numpy as np
 
 from repro.config import ExperimentConfig
-from repro.core.bandwidth import weighted_equal_rate_allocation
+from repro.core.bandwidth import (equal_finish_allocation,
+                                  weighted_equal_rate_allocation)
 from repro.core.hierarchy import HierarchicalServer, HierarchyConfig
 from repro.core.scheduler import get_policy
 from repro.core.server import SemiSyncServer, ServerConfig
@@ -46,6 +55,8 @@ from repro.data.partition import ClientDataset
 from repro.fl.driver import SimResult, TopologyAdapter, run_event_loop
 from repro.fl.engine import SimulationEngine
 from repro.mobility.multicell import MultiCellNetwork
+from repro.wireless.channel import noise_w_per_hz, pathloss_pow
+from repro.wireless.timing import compute_times
 
 __all__ = ["SimResult", "MobileAdapter", "run_mobile_simulation"]
 
@@ -61,14 +72,23 @@ class MobileAdapter(TopologyAdapter):
             wl, n, n_cells=mob.n_cells, seed=seed, mobility=mob.model,
             speed_mps=mob.speed_mps, pause_s=mob.pause_s,
             gm_alpha=mob.gm_alpha, uniform_distance=policy.uniform_drop,
-            step_s=mob.step_s)
+            step_s=mob.step_s, cell_bandwidth_hz=mob.cell_bandwidth_hz,
+            association=mob.association, load_penalty_m=mob.load_penalty_m)
         self.eta = policy.frequencies(n, self.net)
         self._h_mean = wl.rayleigh_scale * float(np.sqrt(np.pi / 2))
 
-        if bandwidth_policy not in ("optimal", "equal"):
+        if bandwidth_policy not in ("optimal", "equal", "theorem2"):
             raise ValueError(f"unknown bandwidth policy {bandwidth_policy!r}")
         self._bandwidth_policy = bandwidth_policy
-        self._total_bw = wl.total_bandwidth_hz
+        self._wl = wl
+        # Theorem-2 link-budget inputs: bound by the driver via
+        # bind_link_budget (Z depends on the model, which does not exist
+        # yet); until then theorem2 cells fall back to an equal split of
+        # their own budget — never actually priced, because binding marks
+        # every cell dirty and pre_requeue runs before the first pricing
+        self._z_bits: float = 0.0
+        self._tcmp: Optional[np.ndarray] = None
+        self._t_star = np.zeros(self.net.n_cells)   # warm-start per cell
         self.bw = np.zeros(n)
         self._dirty_cells: set = set()
         for c in range(self.net.n_cells):
@@ -84,16 +104,62 @@ class MobileAdapter(TopologyAdapter):
         self.server: Optional[SemiSyncServer] = None
 
     # --- per-cell bandwidth (re-allocated lazily on membership change) -
+    def bind_link_budget(self, z_bits: float, d_i: np.ndarray) -> None:
+        """Driver hook: receive Z and per-UE sample counts, then force a
+        re-allocation of every cell so the theorem2 policy prices real
+        link budgets from the very first cycle."""
+        self._z_bits = float(z_bits)
+        self._tcmp = compute_times(self._wl.cpu_cycles_per_sample, d_i,
+                                   self.net.cpu_freq)
+        if self._bandwidth_policy == "theorem2":
+            self._dirty_cells.update(range(self.net.n_cells))
+
     def _realloc(self, c: int) -> None:
         members = self.net.cell_members(c)
         if len(members) == 0:
             return
+        budget = float(self.net.cell_bw[c])
         if self._bandwidth_policy == "optimal":
             chans = [self.net.channel(i, self._h_mean) for i in members]
             self.bw[members] = weighted_equal_rate_allocation(
-                self.eta[members], chans, self._total_bw)
+                self.eta[members], chans, budget)
+        elif self._bandwidth_policy == "theorem2" and self._tcmp is not None:
+            self._realloc_theorem2(c, members, budget)
         else:
-            self.bw[members] = self._total_bw / len(members)
+            self.bw[members] = budget / len(members)
+
+    def _realloc_theorem2(self, c: int, members: np.ndarray,
+                          budget: float) -> None:
+        """Theorem-2 equal-finish split of the cell's budget over its
+        current members (mean-fading channel snapshot, true per-UE compute
+        times), warm-started from the cell's previous ``t_star``.  A
+        non-converged bisection is retried cold with a wider iteration
+        budget; if it *still* reports non-convergence the cell falls back
+        to an equal split rather than trusting an allocation that no
+        longer equalises finish times (the ``converged`` contract of
+        ``EqualFinishAllocation``).
+
+        The SNR numerators go in directly as ``q`` — same values, to the
+        bit, as building per-member ``UEChannel``s (``pathloss_pow`` keeps
+        d^{−κ} on scalar pow exactly as ``UEChannel.q`` does), without the
+        throwaway object list on every membership change."""
+        wl = self._wl
+        q = wl.tx_power_w * self._h_mean \
+            * pathloss_pow(self.net.distances[members], wl.path_loss_exp) \
+            / noise_w_per_hz(wl.noise_dbm_per_hz)
+        z = np.full(len(members), self._z_bits)
+        tc = self._tcmp[members]
+        hint = float(self._t_star[c]) if self._t_star[c] > 0 else None
+        res = equal_finish_allocation(z, tc, None, budget, t_hint=hint, q=q)
+        if not res.converged:
+            res = equal_finish_allocation(z, tc, None, budget, max_iter=400,
+                                          q=q)
+        if res.converged:
+            self.bw[members] = res.b
+            self._t_star[c] = res.t_star
+        else:
+            self.bw[members] = budget / len(members)
+            self._t_star[c] = 0.0
 
     # --- protocol ------------------------------------------------------
     def make_servers(self, params0) -> None:

@@ -2,10 +2,22 @@
 
 Generalises ``wireless.channel.EdgeNetwork`` (one static cell) to a hex-ish
 grid of base stations with UEs that move under a ``MobilityModel`` and
-associate with the nearest BS.  The channel API (``sample_fading`` /
+associate under a pluggable policy.  The channel API (``sample_fading`` /
 ``channel`` / ``channels`` / ``mean_rates`` / ``distances``) is a drop-in
 superset of ``EdgeNetwork``'s, so ``SchedulingPolicy`` and the Theorem-2/4
 bandwidth allocators work per cell unchanged.
+
+Heterogeneous radio resources: each BS owns its own uplink budget
+``cell_bw[c]`` (``resolve_cell_bandwidth`` broadcasts a scalar or validates
+a per-cell vector; the empty spec reproduces the legacy behaviour where
+every cell owns the full system bandwidth).  Association is either
+
+* ``nearest``     — pure nearest-BS (the bitwise-identical default), or
+* ``load_aware``  — best-response iteration on an effective distance
+  ``d(u, c) + load_penalty_m · members_c / fair_share_c`` with the fair
+  share proportional to the cell's bandwidth budget: hot (or skinny-budget)
+  cells shed UEs to neighbours, which changes the handover dynamics
+  (cf. the macro/micro setting of arXiv:2303.10580).
 
 RNG discipline — two independent streams:
 
@@ -34,6 +46,28 @@ from repro.wireless.channel import make_channel, mean_rates_for
 
 MIN_DIST_M = 5.0        # same floor as EdgeNetwork.drop
 _MOB_STREAM = 0x6D6F62  # "mob" — decorrelates the auxiliary stream
+
+
+def resolve_cell_bandwidth(spec, n_cells: int, default_hz: float
+                           ) -> np.ndarray:
+    """Per-cell uplink budgets [Hz] from a ``MobilityConfig.cell_bandwidth_hz``
+    spec: ``()``/``None`` → every cell owns ``default_hz`` (legacy), one
+    value → broadcast, else exactly one positive entry per cell."""
+    if spec is None:
+        spec = ()
+    arr = np.asarray(spec, dtype=np.float64).reshape(-1)
+    if arr.size == 0:
+        arr = np.full(n_cells, float(default_hz))
+    elif arr.size == 1:
+        arr = np.full(n_cells, float(arr[0]))
+    elif arr.size != n_cells:
+        raise ValueError(f"cell_bandwidth_hz has {arr.size} entries for "
+                         f"{n_cells} cells (want 0, 1, or {n_cells})")
+    else:
+        arr = arr.copy()
+    if not np.all(arr > 0):
+        raise ValueError(f"cell bandwidth budgets must be positive, got {arr}")
+    return arr
 
 
 def cell_layout(n_cells: int, radius_m: float) -> np.ndarray:
@@ -70,16 +104,25 @@ class MultiCellNetwork:
     time: float = 0.0                 # simulated seconds advanced so far
     handovers: int = 0                # lifetime handover count
     step_s: float = 1.0               # mobility integration step
+    cell_bw: np.ndarray = None        # [n_cells] uplink budget per BS [Hz]
+    association: str = "nearest"      # nearest | load_aware
+    load_penalty_m: float = 50.0      # effective metres per unit rel. load
 
     # ------------------------------------------------------------------
     @classmethod
     def drop(cls, cfg: WirelessConfig, n_ues: int, *, n_cells: int = 1,
              seed: int = 0, mobility: str = "static", speed_mps: float = 0.0,
              pause_s: float = 0.0, gm_alpha: float = 0.85,
-             uniform_distance: bool = False, step_s: float = 1.0
-             ) -> "MultiCellNetwork":
+             uniform_distance: bool = False, step_s: float = 1.0,
+             cell_bandwidth_hz=None, association: str = "nearest",
+             load_penalty_m: float = 50.0) -> "MultiCellNetwork":
         if step_s <= 0.0:
             raise ValueError(f"step_s must be positive, got {step_s}")
+        if association not in ("nearest", "load_aware"):
+            raise ValueError(f"unknown association policy {association!r}; "
+                             f"known: ['load_aware', 'nearest']")
+        cell_bw = resolve_cell_bandwidth(cell_bandwidth_hz, n_cells,
+                                         cfg.total_bandwidth_hz)
         rng = np.random.default_rng(seed)
         mob_rng = np.random.default_rng([seed, _MOB_STREAM])
         bs_xy = cell_layout(n_cells, cfg.cell_radius_m)
@@ -110,10 +153,12 @@ class MultiCellNetwork:
             theta = mob_rng.uniform(0.0, 2.0 * np.pi, size=n_ues)
             positions = bs_xy[home] + (r_cell / 2.0) * np.stack(
                 [np.cos(theta), np.sin(theta)], axis=1)
-            assoc, dist0 = _associate(positions, bs_xy)
+            assoc, dist0 = _run_association(positions, bs_xy, association,
+                                            cell_bw, load_penalty_m)
         else:
             positions = area.uniform(mob_rng, n_ues)
-            assoc, dist0 = _associate(positions, bs_xy)
+            assoc, dist0 = _run_association(positions, bs_xy, association,
+                                            cell_bw, load_penalty_m)
 
         ratio = max(cfg.cpu_hetero, 1.0)
         cpu = cfg.cpu_freq_hz * np.exp(
@@ -123,7 +168,9 @@ class MultiCellNetwork:
                              gm_alpha=gm_alpha)
         net = cls(cfg=cfg, n_ues=n_ues, bs_xy=bs_xy, positions=positions,
                   cpu_freq=cpu, rng=rng, mob_rng=mob_rng, mobility=model,
-                  area=area, assoc=assoc, _dist=dist0, step_s=step_s)
+                  area=area, assoc=assoc, _dist=dist0, step_s=step_s,
+                  cell_bw=cell_bw, association=association,
+                  load_penalty_m=load_penalty_m)
         net._mob_state = model.init_state(n_ues, area, mob_rng)
         return net
 
@@ -194,7 +241,9 @@ class MultiCellNetwork:
             self.positions, self._mob_state = self.mobility.step(
                 self.positions, self._mob_state, dt, self.area, self.mob_rng)
             self.time += dt
-        new_assoc, self._dist = _associate(self.positions, self.bs_xy)
+        new_assoc, self._dist = _run_association(
+            self.positions, self.bs_xy, self.association, self.cell_bw,
+            self.load_penalty_m, assoc0=self.assoc)
         moved = np.nonzero(new_assoc != self.assoc)[0]
         events = [(int(u), int(self.assoc[u]), int(new_assoc[u]))
                   for u in moved]
@@ -211,3 +260,74 @@ def _associate(positions: np.ndarray, bs_xy: np.ndarray
     dist = np.maximum(np.sqrt(d2[np.arange(len(positions)), assoc]),
                       MIN_DIST_M)
     return assoc, dist
+
+
+def _associate_load_aware(positions: np.ndarray, bs_xy: np.ndarray,
+                          cell_bw: np.ndarray, penalty_m: float,
+                          assoc0: Optional[np.ndarray] = None,
+                          passes: int = 2
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Load-aware association: best response on the effective distance
+    ``d(u, c) + penalty_m · members_c / fair_c`` with the fair share
+    ``fair_c = n · cell_bw_c / Σ cell_bw`` proportional to the cell's
+    bandwidth budget — hot (or skinny-budget) cells price themselves up
+    and shed UEs.
+
+    Two details make the dynamics well-behaved:
+
+    * **strict improvement with self-exclusion** — a UE evaluating its own
+      cell excludes itself from that cell's load, and only moves when the
+      alternative is *strictly* cheaper (hysteresis: an unchanged geometry
+      re-associates to exactly the same assignment, so a lazy re-run never
+      manufactures handovers);
+    * **chunked updates** — simultaneous best response oscillates (every
+      member of a hot cell sees the same cheaper neighbour and the whole
+      cell migrates en masse, then back).  Re-deciding in index chunks of
+      ``~n/4k`` with load counts refreshed between chunks keeps the
+      overshoot bounded by one chunk while staying vectorized; for small n
+      the chunk is a single UE, i.e. exact sequential best response.
+
+    Deterministic (fixed UE order, no RNG), starts from the previous
+    association (or nearest-BS on a fresh drop), and runs a fixed number
+    of ``passes`` over the population.
+    """
+    n, k = len(positions), len(bs_xy)
+    d = np.sqrt(((positions[:, None, :] - bs_xy[None, :, :]) ** 2).sum(-1))
+    fair = n * cell_bw / cell_bw.sum()          # expected members per cell
+    unit = penalty_m / np.maximum(fair, 1e-12)  # metres per member, per cell
+    assoc = (d.argmin(axis=1).astype(np.int64) if assoc0 is None
+             else np.asarray(assoc0, dtype=np.int64).copy())
+    counts = np.bincount(assoc, minlength=k).astype(np.float64)
+    chunk = max(1, n // (4 * k))
+    for _ in range(passes):
+        moved = 0
+        for start in range(0, n, chunk):
+            rows = np.arange(start, min(start + chunk, n))
+            cur = assoc[rows]
+            cost = d[rows] + unit[None, :] * counts[None, :]
+            cost[np.arange(len(rows)), cur] -= unit[cur]   # exclude self
+            best = cost.argmin(axis=1).astype(np.int64)
+            better = cost[np.arange(len(rows)), best] \
+                < cost[np.arange(len(rows)), cur]
+            new = np.where(better, best, cur)
+            if np.any(new != cur):
+                counts += np.bincount(new, minlength=k) \
+                    - np.bincount(cur, minlength=k)
+                assoc[rows] = new
+                moved += int((new != cur).sum())
+        if moved == 0:
+            break
+    dist = np.maximum(d[np.arange(n), assoc], MIN_DIST_M)
+    return assoc, dist
+
+
+def _run_association(positions: np.ndarray, bs_xy: np.ndarray,
+                     association: str, cell_bw: np.ndarray, penalty_m: float,
+                     assoc0: Optional[np.ndarray] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Dispatch on the association policy (``nearest`` stays the exact
+    legacy code path, bit for bit)."""
+    if association == "nearest":
+        return _associate(positions, bs_xy)
+    return _associate_load_aware(positions, bs_xy, cell_bw, penalty_m,
+                                 assoc0=assoc0)

@@ -58,6 +58,20 @@ def upload_times(z_bits: float, bandwidth_hz: np.ndarray,
     return out
 
 
+def finish_times(z_bits, bandwidths, channels, tcmp) -> np.ndarray:
+    """Per-UE compute+upload finish time of a bandwidth allocation — the
+    quantity Theorem 2 equalises.  ``z_bits`` may be a scalar (every UE
+    uploads the same model) or per-UE; delegates to the one vectorized
+    Eq. (10) implementation (``upload_times``), so allocation scoring in
+    the Theorem-2 property suite can never drift from the driver's
+    pricing."""
+    n = len(channels)
+    q = np.array([ch.q for ch in channels], dtype=np.float64)
+    z = np.broadcast_to(np.asarray(z_bits, dtype=np.float64), (n,))
+    return np.asarray(tcmp, dtype=np.float64) \
+        + upload_times(z, np.asarray(bandwidths, dtype=np.float64), q)
+
+
 def round_time(times: np.ndarray) -> float:
     """T_k = max_{i∈A_k} T_k^i.  An empty scheduled set (a hierarchical
     cell with no arrivals this round) takes no time, rather than letting

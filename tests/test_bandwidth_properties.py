@@ -1,0 +1,153 @@
+"""Property suite for the Theorem-2/4 allocators (hypothesis or the shim).
+
+Pins the allocation-level contracts the mobile loop's ``theorem2`` policy
+now leans on per requeue:
+
+* ``equal_finish_allocation`` — non-negative, exhausts the budget, truly
+  equalises finish times when it reports ``converged``, is monotone in the
+  payload size, and its warm-started bisection (``t_hint``) lands on the
+  same fixed point as a cold start.
+* ``bandwidths_for_time`` — the vectorized Theorem-4 inversion is bitwise
+  identical per lane to the scalar ``bandwidth_for_time`` (what makes the
+  in-loop bisection affordable at 1024 UEs).
+* ``weighted_equal_rate_allocation`` — realised rates proportional to η.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # clean container (tier-1)
+    from repro.utils.hypofallback import given, settings, strategies as st
+
+from repro.core.bandwidth import (UEChannel, bandwidth_for_time,
+                                  bandwidths_for_time,
+                                  equal_finish_allocation, uplink_rate,
+                                  weighted_equal_rate_allocation)
+from repro.wireless.timing import finish_times
+
+N0 = 10 ** (-174.0 / 10.0) / 1000.0
+
+
+def _ch(h, d):
+    return UEChannel(p=0.01, h=float(h), dist=float(d), kappa=3.8, n0=N0)
+
+
+@st.composite
+def round_inputs(draw, n_min=2, n_max=6):
+    """One round's link state: fading, distances, compute times, payloads."""
+    n = draw(st.integers(n_min, n_max))
+    h = [draw(st.floats(5.0, 150.0)) for _ in range(n)]
+    d = [draw(st.floats(20.0, 250.0)) for _ in range(n)]
+    tc = [draw(st.floats(0.0, 0.3)) for _ in range(n)]
+    z = [draw(st.floats(1e5, 2e6)) for _ in range(n)]
+    return h, d, tc, z
+
+
+# ---------------------------------------------------------------------------
+# equal_finish_allocation (Theorem 2)
+# ---------------------------------------------------------------------------
+
+@given(round_inputs())
+@settings(max_examples=25, deadline=None)
+def test_equal_finish_on_simplex_and_equalised(inputs):
+    h, d, tc, z = inputs
+    chans = [_ch(h[i], d[i]) for i in range(len(h))]
+    res = equal_finish_allocation(z, tc, chans, 1e6)
+    assert res.converged
+    assert np.all(res.b >= 0.0)
+    assert np.all(np.isfinite(res.b))
+    assert abs(res.b.sum() - 1e6) / 1e6 < 1e-6          # budget exhausted
+    fin = finish_times(z, res.b, chans, tc)
+    assert np.ptp(fin) < 1e-3 * res.t_star              # Theorem-2 property
+    assert abs(np.mean(fin) - res.t_star) < 1e-2 * res.t_star
+
+
+@given(round_inputs(), st.integers(0, 5), st.floats(1.3, 4.0))
+@settings(max_examples=25, deadline=None)
+def test_equal_finish_monotone_in_payload(inputs, which, scale):
+    """Growing one UE's payload must grow its share of the budget (and the
+    common finish time): bandwidth is monotone in z_bits."""
+    h, d, tc, z = inputs
+    n = len(h)
+    chans = [_ch(h[i], d[i]) for i in range(n)]
+    base = equal_finish_allocation(z, tc, chans, 1e6)
+    i = which % n
+    z2 = list(z)
+    z2[i] = z[i] * scale
+    grown = equal_finish_allocation(z2, tc, chans, 1e6)
+    assert base.converged and grown.converged
+    assert grown.t_star >= base.t_star * (1.0 - 1e-9)
+    assert grown.b[i] >= base.b[i] * (1.0 - 1e-6)
+
+
+@given(round_inputs(), st.floats(0.7, 1.4))
+@settings(max_examples=25, deadline=None)
+def test_equal_finish_warm_start_agrees_with_cold(inputs, jitter):
+    """The mobile loop warm-starts each cell's bisection from its previous
+    t_star; a (possibly stale) hint must land on the same fixed point."""
+    h, d, tc, z = inputs
+    chans = [_ch(h[i], d[i]) for i in range(len(h))]
+    cold = equal_finish_allocation(z, tc, chans, 1e6)
+    assert cold.converged
+    warm = equal_finish_allocation(z, tc, chans, 1e6,
+                                   t_hint=cold.t_star * jitter)
+    assert warm.converged
+    assert abs(warm.t_star - cold.t_star) < 1e-6 * cold.t_star
+    np.testing.assert_allclose(warm.b, cold.b, rtol=1e-5)
+    # the degenerate hint keeps the cold-start path bit-for-bit
+    again = equal_finish_allocation(z, tc, chans, 1e6, t_hint=None)
+    np.testing.assert_array_equal(again.b, cold.b)
+    assert again.t_star == cold.t_star
+
+
+@given(round_inputs())
+@settings(max_examples=15, deadline=None)
+def test_equal_finish_precomputed_q_path_bitwise(inputs):
+    """The mobile loop's realloc passes precomputed SNR numerators instead
+    of channel objects — same allocation, to the bit."""
+    h, d, tc, z = inputs
+    chans = [_ch(h[i], d[i]) for i in range(len(h))]
+    via_channels = equal_finish_allocation(z, tc, chans, 1e6)
+    via_q = equal_finish_allocation(
+        z, tc, None, 1e6, q=np.array([ch.q for ch in chans]))
+    np.testing.assert_array_equal(via_channels.b, via_q.b)
+    assert via_channels.t_star == via_q.t_star
+    assert via_channels.converged == via_q.converged
+
+
+# ---------------------------------------------------------------------------
+# vectorized Theorem-4 inversion ≡ scalar, bitwise
+# ---------------------------------------------------------------------------
+
+@given(round_inputs(), st.floats(-0.05, 2.0))
+@settings(max_examples=40, deadline=None)
+def test_bandwidths_for_time_bitwise_equals_scalar(inputs, t):
+    h, d, tc, z = inputs
+    n = len(h)
+    chans = [_ch(h[i], d[i]) for i in range(n)]
+    q = np.array([ch.q for ch in chans])
+    want = np.array([bandwidth_for_time(z[i], t, tc[i], chans[i])
+                     for i in range(n)])
+    got = bandwidths_for_time(np.asarray(z), t, np.asarray(tc), q)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# weighted_equal_rate_allocation (the Theorem-4 other extreme)
+# ---------------------------------------------------------------------------
+
+@given(round_inputs(n_min=2, n_max=5))
+@settings(max_examples=25, deadline=None)
+def test_weighted_equal_rate_proportional_to_eta(inputs):
+    h, d, tc, z = inputs
+    n = len(h)
+    chans = [_ch(h[i], d[i]) for i in range(n)]
+    rng = np.random.default_rng(int(1e3 * (sum(h) + sum(d))) % (2 ** 31))
+    eta = rng.uniform(0.1, 1.0, n)
+    eta = eta / eta.sum()
+    b = weighted_equal_rate_allocation(eta, chans, 1e6)
+    assert np.all(b > 0.0)
+    assert abs(b.sum() - 1e6) / 1e6 < 1e-6
+    r = np.array([float(uplink_rate(b[i], chans[i])) for i in range(n)])
+    ratios = r / eta
+    assert np.ptp(ratios) / ratios.mean() < 5e-2        # r_i ∝ η_i

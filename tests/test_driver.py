@@ -219,3 +219,73 @@ def test_degenerate_mobile_adapter_stays_bitwise_static():
     assert float(res.total_time).hex() == "0x1.4066315c4298cp+1"
     assert res.payload_dispatches == 8
     assert res.departed_arrivals == 0
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-resource knobs: degenerate configs stay bitwise identical
+# ---------------------------------------------------------------------------
+
+def test_explicit_uniform_budget_and_nearest_stay_bitwise_golden():
+    """``association="nearest"`` + a uniform ``cell_bandwidth_hz`` equal to
+    the system bandwidth are the explicit spellings of the defaults — the
+    degenerate mobile config must still hit the PR-3 golden, bitwise."""
+    degen = dataclasses.replace(_cfg(), mobility=MobilityConfig(
+        enabled=True, speed_mps=0.0, n_cells=1, hierarchy=False,
+        cell_bandwidth_hz=(1e6,), association="nearest"))
+    res = run_simulation(degen, _MODEL, _clients(), algorithm="perfed",
+                         mode="semi", max_rounds=6, eval_every=2, seed=0)
+    assert [float(t).hex() for t in res.times] == [
+        "0x0.0p+0", "0x1.b877293c2d615p-1",
+        "0x1.ae97a23acc733p+0", "0x1.4066315c4298cp+1"]
+    assert float(res.total_time).hex() == "0x1.4066315c4298cp+1"
+    assert res.payload_dispatches == 8
+
+
+def test_multicell_uniform_budget_matches_unset_budget_bitwise():
+    """A scalar-broadcast budget equal to the system bandwidth must be
+    indistinguishable from the legacy unset spec on a REAL multi-cell
+    hierarchy run (same trajectory, bitwise on host math)."""
+    base = _mobile_cfg()
+    explicit = dataclasses.replace(base, mobility=dataclasses.replace(
+        base.mobility, cell_bandwidth_hz=(1e6,)))
+    kw = dict(algorithm="perfed", mode="semi", bandwidth_policy="equal",
+              max_rounds=6, eval_every=2, seed=0)
+    r_a = run_simulation(base, _MODEL, _clients(), **kw)
+    r_b = run_simulation(explicit, _MODEL, _clients(), **kw)
+    np.testing.assert_array_equal(r_a.times, r_b.times)
+    np.testing.assert_array_equal(r_a.losses, r_b.losses)
+    np.testing.assert_array_equal(r_a.pi, r_b.pi)
+    assert r_a.total_time == r_b.total_time
+
+
+def test_one_cell_theorem2_matches_static_equal_finish_bitwise():
+    """A 1-cell mobile drop under ``bandwidth_policy="theorem2"`` must
+    price exactly the static path's ``equal_finish_allocation`` numbers:
+    same distances/CPUs (the 1-cell drop is bitwise EdgeNetwork), same
+    mean-fading channels, same bisection — so the allocation matches
+    bit for bit."""
+    from repro.core.bandwidth import equal_finish_allocation
+    from repro.fl.mobile import MobileAdapter
+    from repro.wireless.timing import compute_times
+
+    n, seed = 8, 3
+    cfg = dataclasses.replace(
+        _cfg(n=n, eta_mode="distance"),        # geometric (non-uniform) drop
+        mobility=MobilityConfig(enabled=True, model="static", speed_mps=0.0,
+                                n_cells=1, hierarchy=False))
+    adapter = MobileAdapter(cfg, n, seed=seed, bandwidth_policy="theorem2",
+                            mode="semi")
+    wl = cfg.wireless
+    z_bits, d_i = 2.5e6, np.full(n, 24)
+    adapter.bind_link_budget(z_bits, d_i)
+    adapter.pre_requeue(np.arange(n))          # the driver's first pricing
+
+    legacy = EdgeNetwork.drop(wl, n, seed=seed)
+    h_mean = wl.rayleigh_scale * float(np.sqrt(np.pi / 2))
+    chans = [legacy.channel(i, h_mean) for i in range(n)]
+    tcmp = compute_times(wl.cpu_cycles_per_sample, d_i, legacy.cpu_freq)
+    want = equal_finish_allocation(np.full(n, z_bits), tcmp, chans,
+                                   wl.total_bandwidth_hz)
+    assert want.converged
+    np.testing.assert_array_equal(adapter.bw, want.b)
+    assert float(adapter._t_star[0]) == want.t_star

@@ -15,7 +15,9 @@ from repro.data import partition_noniid, synthetic_mnist
 from repro.fl.simulation import run_simulation
 from repro.mobility.models import (Area, GaussMarkov, RandomWaypoint,
                                    StaticMobility, get_mobility)
-from repro.mobility.multicell import MultiCellNetwork, cell_layout
+from repro.mobility.multicell import (MIN_DIST_M, MultiCellNetwork,
+                                      _associate, _associate_load_aware,
+                                      cell_layout, resolve_cell_bandwidth)
 from repro.models import build_model
 from repro.wireless.channel import EdgeNetwork
 
@@ -130,6 +132,114 @@ def test_static_advance_is_pure_clock_update():
     np.testing.assert_array_equal(net.distances, d0)
     np.testing.assert_array_equal(net.assoc, a0)
     assert net.time == 1e6
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous per-cell radio resources: budgets + association policies
+# ---------------------------------------------------------------------------
+
+def test_resolve_cell_bandwidth_broadcast_and_validation():
+    np.testing.assert_array_equal(resolve_cell_bandwidth((), 3, 1e6),
+                                  [1e6, 1e6, 1e6])
+    np.testing.assert_array_equal(resolve_cell_bandwidth(None, 2, 5e5),
+                                  [5e5, 5e5])
+    np.testing.assert_array_equal(resolve_cell_bandwidth((2e6,), 3, 1e6),
+                                  [2e6, 2e6, 2e6])
+    np.testing.assert_array_equal(
+        resolve_cell_bandwidth((2e6, 5e5, 5e5), 3, 1e6), [2e6, 5e5, 5e5])
+    with pytest.raises(ValueError, match="2 entries for 3 cells"):
+        resolve_cell_bandwidth((1e6, 2e6), 3, 1e6)
+    with pytest.raises(ValueError, match="positive"):
+        resolve_cell_bandwidth((1e6, 0.0), 2, 1e6)
+
+
+def test_cell_bandwidth_override_coerces_to_floats():
+    from repro.config import ExperimentConfig, apply_overrides
+    cfg = apply_overrides(ExperimentConfig(),
+                          {"mobility.cell_bandwidth_hz": "2e6, 5e5"})
+    assert cfg.mobility.cell_bandwidth_hz == (2e6, 5e5)
+    cleared = apply_overrides(cfg, {"mobility.cell_bandwidth_hz": ""})
+    assert cleared.mobility.cell_bandwidth_hz == ()
+
+
+def test_unknown_association_policy_rejected():
+    with pytest.raises(ValueError, match="association"):
+        MultiCellNetwork.drop(WirelessConfig(), 8, n_cells=2,
+                              association="teleport")
+
+
+def test_load_aware_sheds_ues_from_hot_cell():
+    """A cluster just on cell 0's side of the midline: nearest piles all of
+    them onto BS 0; load-aware spills the marginal ones to BS 1 once the
+    load penalty outweighs the small distance gap."""
+    bs = np.array([[0.0, 0.0], [100.0, 0.0]])
+    pos = np.stack([np.linspace(38.0, 49.0, 10), np.zeros(10)], axis=1)
+    a_near, d_near = _associate(pos, bs)
+    assert (a_near == 0).all()
+    bw = np.array([1e6, 1e6])
+    a_load, d_load = _associate_load_aware(pos, bs, bw, penalty_m=50.0)
+    counts = np.bincount(a_load, minlength=2)
+    assert counts[1] >= 1                     # hot cell shed at least one
+    assert counts.max() < 10                  # strictly more balanced
+    # serving distance stays the TRUE distance to the serving BS
+    d = np.linalg.norm(pos[:, None] - bs[None], axis=-1)
+    np.testing.assert_array_equal(
+        d_load, np.maximum(d[np.arange(10), a_load], MIN_DIST_M))
+
+
+def test_load_aware_fair_share_scales_with_budget():
+    """With a macro budget on BS 0, its fair share grows — the same drop
+    keeps more UEs on the macro cell than under equal budgets."""
+    bs = np.array([[0.0, 0.0], [100.0, 0.0]])
+    rng = np.random.default_rng(0)
+    pos = np.stack([rng.uniform(20.0, 80.0, 40),
+                    rng.uniform(-30.0, 30.0, 40)], axis=1)
+    a_eq, _ = _associate_load_aware(pos, bs, np.array([1e6, 1e6]),
+                                    penalty_m=50.0)
+    a_macro, _ = _associate_load_aware(pos, bs, np.array([4e6, 1e6]),
+                                       penalty_m=50.0)
+    assert np.bincount(a_macro, minlength=2)[0] > \
+        np.bincount(a_eq, minlength=2)[0]
+
+
+def test_load_aware_deterministic_and_stable_on_balanced_input():
+    net_a = MultiCellNetwork.drop(WirelessConfig(), 64, n_cells=4, seed=2,
+                                  association="load_aware")
+    net_b = MultiCellNetwork.drop(WirelessConfig(), 64, n_cells=4, seed=2,
+                                  association="load_aware")
+    np.testing.assert_array_equal(net_a.assoc, net_b.assoc)
+    np.testing.assert_array_equal(net_a.distances, net_b.distances)
+    assert net_a.cell_counts().sum() == 64
+
+
+def test_load_aware_advance_emits_consistent_handover_events():
+    net = MultiCellNetwork.drop(WirelessConfig(), 64, n_cells=3, seed=1,
+                                mobility="random_waypoint", speed_mps=40.0,
+                                association="load_aware",
+                                cell_bandwidth_hz=(2e6, 5e5, 5e5))
+    events = []
+    for t in range(1, 21):
+        events += net.advance_to(float(t * 10))
+    assert net.handovers == len(events)
+    for (ue, src, dst) in events:
+        assert src != dst and 0 <= ue < 64
+    # distances always the true serving-BS distance
+    d = np.linalg.norm(net.positions[:, None] - net.bs_xy[None], axis=-1)
+    np.testing.assert_array_equal(
+        net.distances,
+        np.maximum(d[np.arange(64), net.assoc], MIN_DIST_M))
+
+
+def test_nearest_with_budgets_keeps_legacy_association():
+    """Budgets alone must not perturb the nearest-BS association or the
+    fading stream: geometry is untouched by ``cell_bandwidth_hz``."""
+    a = MultiCellNetwork.drop(WirelessConfig(), 32, n_cells=4, seed=5)
+    b = MultiCellNetwork.drop(WirelessConfig(), 32, n_cells=4, seed=5,
+                              cell_bandwidth_hz=(2e6, 5e5, 5e5, 1e6))
+    np.testing.assert_array_equal(a.assoc, b.assoc)
+    np.testing.assert_array_equal(a.distances, b.distances)
+    np.testing.assert_array_equal(a.sample_fading(), b.sample_fading())
+    np.testing.assert_array_equal(b.cell_bw, [2e6, 5e5, 5e5, 1e6])
 
 
 # ---------------------------------------------------------------------------
