@@ -55,7 +55,7 @@ def _setup(n_ues: int, seed: int = 0):
 
 
 def _point(cfg, model, clients, *, speed: float, n_cells: int,
-           rounds: int) -> dict:
+           rounds: int, step_s: float = 1.0) -> dict:
     import dataclasses
 
     from repro.config import MobilityConfig
@@ -63,7 +63,8 @@ def _point(cfg, model, clients, *, speed: float, n_cells: int,
 
     cfg = dataclasses.replace(cfg, mobility=MobilityConfig(
         enabled=True, model="random_waypoint", speed_mps=speed,
-        n_cells=n_cells, hierarchy=n_cells > 1, cloud_sync_every=4))
+        n_cells=n_cells, hierarchy=n_cells > 1, cloud_sync_every=4,
+        step_s=step_s))
     t0 = time.perf_counter()
     res = run_simulation(cfg, model, clients, algorithm="perfed",
                          mode="semi", bandwidth_policy="equal",
@@ -90,8 +91,10 @@ def run(smoke: bool = False) -> None:
     results = {"n_ues": n_ues, "rounds": rounds, "smoke": smoke, "sweep": []}
     for n_cells in cells:
         for speed in speeds:
+            # smoke sims last ~2 simulated seconds; a sub-second mobility
+            # tick keeps the UEs moving (and handovers exercised) there
             pt = _point(cfg, model, clients, speed=speed, n_cells=n_cells,
-                        rounds=rounds)
+                        rounds=rounds, step_s=0.2 if smoke else 1.0)
             results["sweep"].append(pt)
             emit(f"mobility/v={speed:g}/cells={n_cells}/n={n_ues}",
                  pt["wall_s"] / max(pt["rounds"], 1) * 1e6,

@@ -31,6 +31,7 @@ SUITES = [
     "kernels",           # Pallas kernels vs oracles
     "engine_throughput", # batched vs sequential simulation engine
     "mobility",          # mobile multi-cell: speed × cells at 1024 UEs
+    "event_loop",        # host-vs-device split, UE-count sweep to 16384
     "requeue",           # batched vs legacy per-UE requeue pricing
     "roofline",          # §Roofline — from dry-run artifacts
 ]

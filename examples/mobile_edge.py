@@ -38,14 +38,17 @@ def main() -> None:
     model = build_model(cfg.model)
     data = synthetic_mnist(n=2500, seed=0)
 
+    # these demo runs last only a few simulated seconds; mobility
+    # integrates on the step_s grid, so a sub-second tick keeps the UEs
+    # visibly moving (and handing over) within the run
     regimes = {
         "static": cfg,
         "mobile": dataclasses.replace(cfg, mobility=MobilityConfig(
             enabled=True, model="random_waypoint", speed_mps=20.0,
-            n_cells=1)),
+            n_cells=1, step_s=0.1)),
         "hierarchy": dataclasses.replace(cfg, mobility=MobilityConfig(
             enabled=True, model="random_waypoint", speed_mps=40.0,
-            n_cells=3, hierarchy=True, cloud_sync_every=3)),
+            n_cells=3, hierarchy=True, cloud_sync_every=3, step_s=0.1)),
     }
 
     for label, c in regimes.items():

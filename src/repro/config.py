@@ -245,6 +245,11 @@ class MobilityConfig:
     # load_aware: extra effective metres per unit of relative cell load
     # (members / fair share, budget-normalised) — hot cells shed UEs
     load_penalty_m: float = 50.0
+    # association refresh strategy: "safe_radius" re-scores only UEs whose
+    # displacement since their last score exceeds their handover margin
+    # (bitwise-identical results, amortized O(n) per tick); "full" forces
+    # the legacy [n, k] recompute every tick (exactness reference)
+    reassoc: str = "safe_radius"
 
 
 @dataclass(frozen=True)

@@ -30,14 +30,20 @@ drain's per-cell arrival counting can never be skewed by mid-drain
 handovers.
 
 Requeue pricing is batched: a requeue of k UEs draws ONE ``[k, n]`` fading
-matrix (bitwise identical to k sequential ``sample_fading()`` calls) and
-runs Eq. (10)–(11) vectorized over the k lanes, instead of one full-vector
-RNG draw plus python-scalar channel math per UE per requeue
-(``benchmarks/requeue.py`` measures the win at 1024 UEs).  The d^{−κ}
-path-loss factors stay on python-scalar pow so every lane is bitwise
-identical to the legacy per-UE loop (see ``wireless.channel.pathloss_pow``)
-— cached as one full vector while the topology is frozen, priced per
-requeued lane once mobility starts replacing the distances array.
+matrix (bitwise identical to k sequential ``sample_fading()`` calls —
+drawn in bounded row blocks so a 16k-UE initial fill never materialises an
+``[n, n]`` matrix) and runs Eq. (10)–(11) vectorized over the k lanes,
+instead of one full-vector RNG draw plus python-scalar channel math per UE
+per requeue (``benchmarks/requeue.py`` measures the win at 1024 UEs).  The
+d^{−κ} path-loss factors stay on python-scalar pow so every lane is
+bitwise identical to the legacy per-UE loop (see
+``wireless.channel.pathloss_pow``) — cached as one full vector while the
+topology is frozen, priced per requeued lane once mobility starts
+replacing the distances array.  Departed-UE restarts are batched the same
+way: all UEs handed over mid-flight during one drain are re-priced with a
+single ``cycle_durations`` call.  Evaluation is batched too: each eval
+point vmaps ``engine.eval_one`` over the cohort (one dispatch per
+batch-shape group — see ``engine.eval_many``).
 """
 from __future__ import annotations
 
@@ -53,6 +59,9 @@ from repro.data.partition import ClientDataset
 from repro.fl.engine import SimulationEngine, ensure_engine
 from repro.wireless.channel import noise_w_per_hz, pathloss_pow
 from repro.wireless.timing import compute_times, model_bits, upload_times
+
+# max doubles one fading-draw block may materialise (~8 MB)
+FADING_BLOCK = 1 << 20
 
 
 @dataclass
@@ -192,11 +201,27 @@ def make_cycle_duration_fn(adapter: TopologyAdapter, wl, z_bits: float,
         cache["src"], cache["pw"] = None, None
         return pathloss_pow(np.asarray(dists)[idx], kappa)
 
+    def _fading_lanes(idx: np.ndarray) -> np.ndarray:
+        # one [k, n] draw, materialised in row blocks of ≤ FADING_BLOCK
+        # doubles: numpy Generators fill arrays from the bitstream
+        # sequentially, so the blocks are bitwise the single big call —
+        # without the O(k·n) peak memory (an [n, n] matrix at the initial
+        # heap fill: 2 GB at 16384 UEs)
+        k = len(idx)
+        rows = max(1, FADING_BLOCK // max(net.n_ues, 1))
+        if k <= rows:
+            return net.sample_fading_batch(k)[np.arange(k), idx]
+        h = np.empty(k)
+        for lo in range(0, k, rows):
+            hi = min(lo + rows, k)
+            h[lo:hi] = net.sample_fading_batch(hi - lo)[
+                np.arange(hi - lo), idx[lo:hi]]
+        return h
+
     def cycle_durations(ues) -> np.ndarray:
         adapter.pre_requeue(ues)
         idx = np.asarray(ues, dtype=np.int64)
-        k = len(idx)
-        h = net.sample_fading_batch(k)[np.arange(k), idx]
+        h = _fading_lanes(idx)
         tcmp = compute_times(cycles, d_i[idx], net.cpu_freq[idx])
         q = p * h * _pathloss(net.distances, idx) / n0   # UEChannel.q
         tcom = upload_times(z_bits, adapter.bw[idx], q)
@@ -258,15 +283,18 @@ def run_event_loop(cfg: ExperimentConfig, model,
     eval_idx = rng.choice(n, size=min(eval_clients, n), replace=False)
 
     def evaluate(params, k: int) -> Tuple[float, float, float]:
+        # per-client keys derived exactly as the sequential loop did, then
+        # the whole cohort evaluates as one vmapped dispatch per shape
+        # group (engine.eval_many); singleton groups ride the eval_one jit
         r = jax.random.fold_in(eval_key, k)
-        pl, gl, ac = [], [], []
+        subs, batches_list = [], []
         for ci in eval_idx:
             c = clients[ci]
             r, sub = jax.random.split(r)
-            batches = {"inner": c.sample(fl.inner_batch),
-                       "outer": {k2: v for k2, v in c.test.items()}}
-            p, g, a = engine.eval_one(params, batches, sub)
-            pl.append(float(p)); gl.append(float(g)); ac.append(float(a))
+            subs.append(sub)
+            batches_list.append({"inner": c.sample(fl.inner_batch),
+                                 "outer": {k2: v for k2, v in c.test.items()}})
+        pl, gl, ac = engine.eval_many(params, batches_list, subs)
         acc = (float(np.nanmean(ac))
                if np.any(np.isfinite(ac)) else float("nan"))
         return float(np.mean(pl)), float(np.mean(gl)), acc
@@ -295,7 +323,7 @@ def run_event_loop(cfg: ExperimentConfig, model,
         times.append(0.0); plosses.append(p0); glosses.append(g0)
         accs.append(a0); rounds_at.append(0)
 
-    def restart_departed(ue: int) -> None:
+    def restart_departed(items: List[Tuple[int, float]]) -> None:
         # Liveness for handed-over UEs: an upload that closed at the SOURCE
         # cell gets no redistribution from it (the UE is no longer a
         # member), and the destination owes it nothing until the τ > S
@@ -304,17 +332,29 @@ def run_event_loop(cfg: ExperimentConfig, model,
         # destination's round clock at handover time, so the next upload is
         # weighted correctly there.  Without this the UE would idle for up
         # to S destination rounds after every mid-flight handover.
+        # ``items`` is every (ue, cycle start time) of the drain batch —
+        # priced with ONE cycle_durations call (one [k, n] fading draw)
+        # instead of one [1, n] draw each.  A departed UE the closing
+        # (destination) cell redistributed to in this very drain already
+        # holds a fresh cycle — restarting it too would double-queue it.
         nonlocal seq
-        (dur,) = cycle_durations([ue])
-        heapq.heappush(heap, (t_now + float(dur), seq, ue,
-                              adapter.rounds_done(), float(dur),
-                              int(epoch[ue]), adapter.dispatch_cell(ue)))
-        seq += 1
+        items = [it for it in items if it[0] not in redistributed]
+        if not items:
+            return
+        for (ue, t0), dur in zip(items,
+                                 cycle_durations([u for u, _ in items])):
+            heapq.heappush(heap, (t0 + float(dur), seq, ue,
+                                  adapter.rounds_done(), float(dur),
+                                  int(epoch[ue]), adapter.dispatch_cell(ue)))
+            seq += 1
+
+    redistributed: set = set()          # UEs given a new cycle this drain
 
     def handle(result) -> None:
         nonlocal seq
         dist = result["distribute"]
         if dist:
+            redistributed.update(int(i) for i in dist)
             for i in dist:
                 held_params[i] = result["params"]
                 epoch[i] += 1           # cancels any in-flight computation
@@ -346,6 +386,7 @@ def run_event_loop(cfg: ExperimentConfig, model,
         drained = [0] * adapter.n_protocol_cells
         batch: List[Tuple[float, int, int, float, int]] = []
         closing: Optional[int] = None
+        redistributed.clear()
         while heap:
             t, sq, ue, _version, dur, ev_epoch, cell = heapq.heappop(heap)
             if ev_epoch != epoch[ue]:
@@ -387,9 +428,8 @@ def run_event_loop(cfg: ExperimentConfig, model,
 
             handle(adapter.on_round_batch(
                 closing, [ue for _, ue, _, _, _ in batch], aggregate))
-            for _t, ue, _sq, _dur, cell in batch:
-                if adapter.dispatch_cell(ue) != cell:
-                    restart_departed(ue)
+            restart_departed([(ue, t) for t, ue, _sq, _dur, cell
+                              in batch if adapter.dispatch_cell(ue) != cell])
         else:
             payloads = engine.compute_payloads(
                 held, triplets,
@@ -397,6 +437,7 @@ def run_event_loop(cfg: ExperimentConfig, model,
                  for _, _, sq, _, _ in batch],
                 a_i)
             # ---- feed the protocol in arrival order ------------------------
+            restarts: List[Tuple[int, float]] = []
             for (t, ue, _sq, dur, cell), payload in zip(batch, payloads):
                 t_now = t
                 busy_time[ue] += dur    # only completed cycles count as busy
@@ -404,7 +445,8 @@ def run_event_loop(cfg: ExperimentConfig, model,
                 if result is not None:
                     handle(result)
                 if adapter.dispatch_cell(ue) != cell:
-                    restart_departed(ue)
+                    restarts.append((ue, t))
+            restart_departed(restarts)
 
     # drain the async dispatch queue so wall-clock timings of this function
     # include all device work it issued (jit dispatch is asynchronous)

@@ -124,27 +124,73 @@ class SimulationEngine:
         # keeps ids stable for the cache's lifetime
         self._flat_versions: Dict[int, Tuple[Any, jax.Array]] = {}
         self._eval_fn = None
+        self._eval_vfn = None
         self.dispatches = 0            # device calls issued (for benchmarks)
         self.payloads_computed = 0
+        self.eval_dispatches = 0       # eval calls (kept off payload count)
 
     # ------------------------------------------------------------------
     # evaluation (jitted once per engine, reused across simulations)
     # ------------------------------------------------------------------
+    def _eval_raw(self):
+        model, fl = self.model, self.fl
+
+        def _eval(params, batches, r):
+            ploss, paux = personalized_eval(model, fl, params, batches, r)
+            gout = model.loss(params, batches["outer"], r)
+            gloss, _ = gout if isinstance(gout, tuple) else (gout, {})
+            acc = (paux.get("acc", jnp.nan)
+                   if isinstance(paux, dict) else jnp.nan)
+            return ploss, gloss, acc
+
+        return _eval
+
     def eval_one(self, params, batches, rng):
         """(personalized loss, global loss, accuracy) for one client."""
         if self._eval_fn is None:
-            model, fl = self.model, self.fl
-
-            def _eval(params, batches, r):
-                ploss, paux = personalized_eval(model, fl, params, batches, r)
-                gout = model.loss(params, batches["outer"], r)
-                gloss, _ = gout if isinstance(gout, tuple) else (gout, {})
-                acc = (paux.get("acc", jnp.nan)
-                       if isinstance(paux, dict) else jnp.nan)
-                return ploss, gloss, acc
-
-            self._eval_fn = jax.jit(_eval)
+            self._eval_fn = jax.jit(self._eval_raw())
+        self.eval_dispatches += 1
         return self._eval_fn(params, batches, rng)
+
+    def eval_many(self, params, batches_list: Sequence[Any],
+                  rngs: Sequence[jax.Array]
+                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Evaluate a cohort of clients against ONE ``params``: per-client
+        (personalized loss, global loss, accuracy) as ``[m]`` arrays.
+
+        Clients sharing a batch-shape signature are stacked and evaluated
+        as one vmapped dispatch with the model weights broadcast
+        (``in_axes=(None, 0, 0)``) — an eval point over a uniform cohort
+        costs 1 device call instead of m.  Singleton groups go through the
+        exact same jitted scalar function as ``eval_one``, so trajectories
+        of shape-heterogeneous cohorts (and the pre-batching goldens) are
+        reproduced bit for bit.
+        """
+        m = len(batches_list)
+        assert m == len(rngs)
+        pl = np.zeros(m)
+        gl = np.zeros(m)
+        ac = np.zeros(m)
+        groups: Dict[Tuple, List[int]] = {}
+        for i, b in enumerate(batches_list):
+            groups.setdefault(_shape_signature(b), []).append(i)
+        for idx in groups.values():
+            if len(idx) == 1:
+                i = idx[0]
+                p, g, a = self.eval_one(params, batches_list[i], rngs[i])
+                pl[i], gl[i], ac[i] = float(p), float(g), float(a)
+                continue
+            if self._eval_vfn is None:
+                self._eval_vfn = jax.jit(
+                    jax.vmap(self._eval_raw(), in_axes=(None, 0, 0)))
+            batches_b = _stack_trees([batches_list[i] for i in idx])
+            rngs_b = jnp.stack([rngs[i] for i in idx])
+            p, g, a = self._eval_vfn(params, batches_b, rngs_b)
+            self.eval_dispatches += 1
+            pl[idx] = np.asarray(p)
+            gl[idx] = np.asarray(g)
+            ac[idx] = np.asarray(a)
+        return pl, gl, ac
 
     # ------------------------------------------------------------------
     # per-arrival payloads (sequential mode / partial batches / tests)

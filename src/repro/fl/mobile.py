@@ -73,7 +73,8 @@ class MobileAdapter(TopologyAdapter):
             speed_mps=mob.speed_mps, pause_s=mob.pause_s,
             gm_alpha=mob.gm_alpha, uniform_distance=policy.uniform_drop,
             step_s=mob.step_s, cell_bandwidth_hz=mob.cell_bandwidth_hz,
-            association=mob.association, load_penalty_m=mob.load_penalty_m)
+            association=mob.association, load_penalty_m=mob.load_penalty_m,
+            reassoc=mob.reassoc)
         self.eta = policy.frequencies(n, self.net)
         self._h_mean = wl.rayleigh_scale * float(np.sqrt(np.pi / 2))
 

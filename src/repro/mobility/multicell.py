@@ -28,12 +28,32 @@ RNG discipline — two independent streams:
 * ``mob_rng``  (auxiliary): drop angles, multi-cell positions, and all
   mobility-model draws — extra geometry never perturbs the fading stream.
 
-``advance_to(t)`` integrates mobility in ``step_s``-second ticks, refreshes
-serving-BS association once per advance, and returns the handover events
-``[(ue, src_cell, dst_cell), ...]`` it induced.
+``advance_to(t)`` runs the simulation clock.  Two properties keep its
+amortized per-call cost O(1) even though the event loop calls it once per
+heap pop (tens of thousands of times per run):
+
+* **Grid-aligned ticks** — integration steps live on the global
+  ``step_s`` grid (tick ``j`` covers ``[j·step_s, (j+1)·step_s)``), and an
+  advance integrates all newly-completed ticks with one batched
+  ``[ticks, n, D]`` RNG draw (``MobilityModel.step_many``).  Positions —
+  and hence the mobility RNG schedule — are a pure function of *which*
+  ticks have elapsed, never of how the event loop grouped them into calls
+  (``advance_to(t1); advance_to(t2)`` ≡ ``advance_to(t2)`` bitwise).
+  Calls that complete no tick are pure clock updates.
+* **Safe-radius re-association** — every re-score records a per-UE
+  handover margin (half the gap to the runner-up BS, in metres); on later
+  ticks only UEs whose displacement since their last score reaches that
+  margin are re-scored against the full BS list.  Exact for ``nearest``
+  by the triangle inequality; for ``load_aware`` the margin is measured
+  on *effective* cost and gates whether the best-response recompute runs
+  at all (loads can only change through a recompute, so an all-safe tick
+  is provably a fixpoint).  ``reassoc="full"`` forces the legacy
+  every-tick ``[n, k]`` recompute — both modes are pinned bitwise
+  identical in ``tests/test_sim_clock.py``.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
@@ -107,6 +127,11 @@ class MultiCellNetwork:
     cell_bw: np.ndarray = None        # [n_cells] uplink budget per BS [Hz]
     association: str = "nearest"      # nearest | load_aware
     load_penalty_m: float = 50.0      # effective metres per unit rel. load
+    reassoc: str = "safe_radius"      # safe_radius | full (exact reference)
+    _ticks: int = 0                   # completed step_s grid ticks
+    _anchor: np.ndarray = None        # [n, 2] position at last re-score
+    _margin: np.ndarray = None        # [n] safe handover radius [m]
+    _la_converged: bool = False       # load_aware best response at fixpoint
 
     # ------------------------------------------------------------------
     @classmethod
@@ -115,12 +140,16 @@ class MultiCellNetwork:
              pause_s: float = 0.0, gm_alpha: float = 0.85,
              uniform_distance: bool = False, step_s: float = 1.0,
              cell_bandwidth_hz=None, association: str = "nearest",
-             load_penalty_m: float = 50.0) -> "MultiCellNetwork":
+             load_penalty_m: float = 50.0,
+             reassoc: str = "safe_radius") -> "MultiCellNetwork":
         if step_s <= 0.0:
             raise ValueError(f"step_s must be positive, got {step_s}")
         if association not in ("nearest", "load_aware"):
             raise ValueError(f"unknown association policy {association!r}; "
                              f"known: ['load_aware', 'nearest']")
+        if reassoc not in ("safe_radius", "full"):
+            raise ValueError(f"unknown reassoc mode {reassoc!r}; "
+                             f"known: ['full', 'safe_radius']")
         cell_bw = resolve_cell_bandwidth(cell_bandwidth_hz, n_cells,
                                          cfg.total_bandwidth_hz)
         rng = np.random.default_rng(seed)
@@ -170,8 +199,14 @@ class MultiCellNetwork:
                   cpu_freq=cpu, rng=rng, mob_rng=mob_rng, mobility=model,
                   area=area, assoc=assoc, _dist=dist0, step_s=step_s,
                   cell_bw=cell_bw, association=association,
-                  load_penalty_m=load_penalty_m)
+                  load_penalty_m=load_penalty_m, reassoc=reassoc)
         net._mob_state = model.init_state(n_ues, area, mob_rng)
+        # safe-radius bookkeeping: zero margins force the first moving tick
+        # to re-score everyone (and establish real margins); until a
+        # load_aware best response is observed at a fixpoint its margins
+        # cannot be trusted, so _la_converged starts False
+        net._anchor = positions.copy()
+        net._margin = np.zeros(n_ues)
         return net
 
     # ------------------------------------------------------------------
@@ -225,31 +260,102 @@ class MultiCellNetwork:
     # time
     # ------------------------------------------------------------------
     def advance_to(self, t: float) -> List[Tuple[int, int, int]]:
-        """Advance mobility to simulated time ``t``; re-associate and return
+        """Advance the simulation clock to ``t``; integrate any newly
+        completed ``step_s`` grid ticks, refresh association, and return
         the handover events ``[(ue, src, dst), ...]`` this advance caused.
 
         Static mobility (or a zero/negative time step) is a pure clock
         update — positions, distances and association stay exactly as
         dropped, which is what keeps the degenerate configuration bitwise
-        identical to the legacy single-cell path.
+        identical to the legacy single-cell path.  So is any advance that
+        completes no new grid tick — the O(1)-amortized common case when
+        the event loop calls this once per heap pop.
         """
         if t <= self.time or self.mobility.is_static:
             self.time = max(self.time, t)
             return []
-        while self.time < t - 1e-9:
-            dt = min(self.step_s, t - self.time)
-            self.positions, self._mob_state = self.mobility.step(
-                self.positions, self._mob_state, dt, self.area, self.mob_rng)
-            self.time += dt
-        new_assoc, self._dist = _run_association(
-            self.positions, self.bs_xy, self.association, self.cell_bw,
-            self.load_penalty_m, assoc0=self.assoc)
+        self.time = t
+        target = int(math.floor(t / self.step_s + 1e-9))
+        if target <= self._ticks:
+            return []
+        self.positions, self._mob_state = self.mobility.step_many(
+            self.positions, self._mob_state, target - self._ticks,
+            self.step_s, self.area, self.mob_rng)
+        self._ticks = target
+        new_assoc = self._reassociate()
         moved = np.nonzero(new_assoc != self.assoc)[0]
         events = [(int(u), int(self.assoc[u]), int(new_assoc[u]))
                   for u in moved]
         self.handovers += len(events)
         self.assoc = new_assoc
         return events
+
+    # ------------------------------------------------------------------
+    # association refresh (safe-radius incremental, or full reference)
+    # ------------------------------------------------------------------
+    def _serving_dist(self, assoc: np.ndarray) -> np.ndarray:
+        """Serving-BS distance per UE from current positions — the same
+        x² + y² → sqrt arithmetic as selecting the serving column of the
+        full ``[n, k]`` matrix, so the values are bitwise identical."""
+        return np.maximum(
+            np.sqrt(((self.positions - self.bs_xy[assoc]) ** 2).sum(-1)),
+            MIN_DIST_M)
+
+    def _reassociate(self) -> np.ndarray:
+        if self.reassoc == "full":
+            new_assoc, self._dist = _run_association(
+                self.positions, self.bs_xy, self.association, self.cell_bw,
+                self.load_penalty_m, assoc0=self.assoc)
+            return new_assoc
+        if self.association == "nearest":
+            return self._reassoc_nearest()
+        return self._reassoc_load_aware()
+
+    def _reassoc_nearest(self) -> np.ndarray:
+        """Exact incremental nearest-BS: only UEs displaced past their
+        safe radius since their last score can have changed argmin (by the
+        triangle inequality: every other BS is still ≥ 2·margin − 2·disp
+        farther), so only those rows are re-scored against the BS list."""
+        pos, bs = self.positions, self.bs_xy
+        new_assoc = self.assoc
+        if self.n_cells > 1:
+            disp_sq = ((pos - self._anchor) ** 2).sum(-1)
+            cand = np.nonzero(disp_sq >= self._margin * self._margin)[0]
+            if len(cand):
+                d2 = ((pos[cand, None, :] - bs[None, :, :]) ** 2).sum(-1)
+                new_assoc = self.assoc.copy()
+                new_assoc[cand] = d2.argmin(axis=1).astype(np.int64)
+                two = np.partition(np.sqrt(d2), 1, axis=1)
+                self._margin[cand] = (two[:, 1] - two[:, 0]) / 2.0
+                self._anchor[cand] = pos[cand]
+        # serving distance tracks every tick (it prices upload times)
+        self._dist = self._serving_dist(new_assoc)
+        return new_assoc
+
+    def _reassoc_load_aware(self) -> np.ndarray:
+        """Safe-radius-gated load-aware refresh.  Margins are half the
+        effective-cost gap to the runner-up cell at the last best-response
+        fixpoint.  While no UE has moved past its margin, loads are
+        unchanged (they only change through a recompute) and each UE's own
+        column drifted by < margin, so every UE is still at its strict
+        argmin — the full best response would move nobody — and the
+        ``[n, k]`` recompute is skipped.  Any breach (or a non-converged
+        previous pass, whose margins are meaningless) runs the full
+        recompute and re-anchors everyone."""
+        pos = self.positions
+        if self._la_converged:
+            disp_sq = ((pos - self._anchor) ** 2).sum(-1)
+            if not np.any(disp_sq >= self._margin * self._margin):
+                self._dist = self._serving_dist(self.assoc)
+                return self.assoc
+        info: dict = {}
+        new_assoc, self._dist = _associate_load_aware(
+            pos, self.bs_xy, self.cell_bw, self.load_penalty_m,
+            assoc0=self.assoc, info=info)
+        self._margin = info["margin"]
+        self._la_converged = bool(info["converged"])
+        self._anchor = pos.copy()
+        return new_assoc
 
 
 def _associate(positions: np.ndarray, bs_xy: np.ndarray
@@ -265,7 +371,8 @@ def _associate(positions: np.ndarray, bs_xy: np.ndarray
 def _associate_load_aware(positions: np.ndarray, bs_xy: np.ndarray,
                           cell_bw: np.ndarray, penalty_m: float,
                           assoc0: Optional[np.ndarray] = None,
-                          passes: int = 2
+                          passes: int = 2,
+                          info: Optional[dict] = None
                           ) -> Tuple[np.ndarray, np.ndarray]:
     """Load-aware association: best response on the effective distance
     ``d(u, c) + penalty_m · members_c / fair_c`` with the fair share
@@ -290,6 +397,13 @@ def _associate_load_aware(positions: np.ndarray, bs_xy: np.ndarray,
     Deterministic (fixed UE order, no RNG), starts from the previous
     association (or nearest-BS on a fresh drop), and runs a fixed number
     of ``passes`` over the population.
+
+    When ``info`` is supplied it is filled with the safe-radius gating
+    state: ``info["converged"]`` — whether a full pass observed no moves
+    (the assignment is a best-response fixpoint), and ``info["margin"]``
+    — per-UE half effective-cost gap to the runner-up cell, i.e. how far
+    a UE may drift before its strict argmin could change while loads stay
+    frozen.
     """
     n, k = len(positions), len(bs_xy)
     d = np.sqrt(((positions[:, None, :] - bs_xy[None, :, :]) ** 2).sum(-1))
@@ -299,6 +413,7 @@ def _associate_load_aware(positions: np.ndarray, bs_xy: np.ndarray,
              else np.asarray(assoc0, dtype=np.int64).copy())
     counts = np.bincount(assoc, minlength=k).astype(np.float64)
     chunk = max(1, n // (4 * k))
+    converged = False
     for _ in range(passes):
         moved = 0
         for start in range(0, n, chunk):
@@ -316,8 +431,18 @@ def _associate_load_aware(positions: np.ndarray, bs_xy: np.ndarray,
                 assoc[rows] = new
                 moved += int((new != cur).sum())
         if moved == 0:
+            converged = True
             break
     dist = np.maximum(d[np.arange(n), assoc], MIN_DIST_M)
+    if info is not None:
+        rows = np.arange(n)
+        cost = d + unit[None, :] * counts[None, :]
+        cost[rows, assoc] -= unit[assoc]                   # exclude self
+        own = cost[rows, assoc].copy()
+        cost[rows, assoc] = np.inf
+        alt = cost.min(axis=1)          # k == 1 → inf → infinite margin
+        info["margin"] = np.maximum((alt - own) / 2.0, 0.0)
+        info["converged"] = converged
     return assoc, dist
 
 

@@ -96,7 +96,11 @@ def _run(seed: int, speed: float, n_cells: int, mix: str,
             enabled=True, model="random_waypoint", speed_mps=speed,
             n_cells=n_cells, hierarchy=True, cell_participants=2,
             cloud_sync_every=3, cell_bandwidth_hz=_budgets(mix, n_cells),
-            association="load_aware"))
+            association="load_aware",
+            # these tiny sims last ~1 simulated second; integration ticks
+            # live on the step_s grid, so a sub-second tick keeps the UEs
+            # moving (and handovers exercised) within the run
+            step_s=0.1))
     clients = partition_noniid(_DATA, N_UES, l=4, seed=seed)
     adapter = InstrumentedAdapter(cfg, N_UES, seed=seed,
                                   bandwidth_policy=bandwidth_policy,

@@ -1,0 +1,309 @@
+"""The vectorized simulation clock (PR 5).
+
+* Grid-aligned mobility: integration ticks live on the global ``step_s``
+  grid and a T-tick advance makes one batched ``[T, n, D]`` RNG draw, so
+  the draw schedule — and hence the trajectory — is a pure function of
+  *which ticks elapsed*, never of the ``advance_to`` call pattern (the
+  partial-tick schedule bug this PR fixes).
+* Safe-radius incremental re-association is bitwise identical to the full
+  ``[n, k]`` recompute across randomized trajectories, speeds, and both
+  association policies (hypothesis property).
+* Batched eval (``engine.eval_many``) matches the sequential per-client
+  ``eval_one`` numerically and costs one dispatch per shape-uniform eval
+  point; shape-heterogeneous cohorts fall back to the eval_one jit bitwise.
+* Departed-UE restarts are priced as one batch per drain.
+* Block-chunked fading draws are bitwise the single big ``[k, n]`` call.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+except ImportError:                       # clean container (tier-1)
+    from repro.utils.hypofallback import (HealthCheck, given, settings,
+                                          strategies as st)
+
+import jax
+
+from repro.config import (ExperimentConfig, FLConfig, MobilityConfig,
+                          WirelessConfig)
+from repro.configs import get_config
+from repro.data import partition_noniid, synthetic_mnist
+from repro.data.partition import ClientDataset
+from repro.fl.engine import SimulationEngine
+from repro.fl.simulation import run_simulation
+from repro.mobility.models import Area, GaussMarkov, RandomWaypoint
+from repro.mobility.multicell import MultiCellNetwork
+from repro.models import build_model
+
+AREA = Area(0.0, 0.0, 400.0, 400.0)
+
+_DATA = synthetic_mnist(n=900, seed=21)
+_MODEL = build_model(get_config("mnist_dnn"))
+
+
+def _fl_cfg(n=8, **kw):
+    return FLConfig(n_ues=n, participants_per_round=4, staleness_bound=6,
+                    alpha=0.03, beta=0.07, inner_batch=8, outer_batch=8,
+                    hessian_batch=8, first_order=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# batched stepping ≡ sequential stepping, and call-pattern independence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", [RandomWaypoint(speed_mps=12.0, pause_s=2.0),
+                                   GaussMarkov(speed_mps=12.0)])
+def test_step_many_bitwise_equals_sequential_steps(model):
+    rng_a = np.random.default_rng(5)
+    rng_b = np.random.default_rng(5)
+    pos = AREA.uniform(rng_a, 32)
+    AREA.uniform(rng_b, 32)               # keep the streams aligned
+    st_a = model.init_state(32, AREA, rng_a)
+    st_b = model.init_state(32, AREA, rng_b)
+    pos_a, pos_b = pos.copy(), pos.copy()
+    pos_a, st_a = model.step_many(pos_a, st_a, 7, 1.0, AREA, rng_a)
+    for _ in range(7):
+        pos_b, st_b = model.step(pos_b, st_b, 1.0, AREA, rng_b)
+    np.testing.assert_array_equal(pos_a, pos_b)
+    for k in st_a:
+        np.testing.assert_array_equal(st_a[k], st_b[k])
+
+
+@pytest.mark.parametrize("model", [RandomWaypoint(speed_mps=9.0),
+                                   GaussMarkov(speed_mps=9.0)])
+def test_step_many_block_chunked_draws_bitwise_stable(model, monkeypatch):
+    """Tick blocks bounded by MAX_DRAW_DOUBLES consume the bitstream
+    exactly like one unbounded [ticks, n, D] draw."""
+    from repro.mobility import models as mm
+
+    def roll(ticks):
+        rng = np.random.default_rng(3)
+        pos = AREA.uniform(rng, 16)
+        st_m = model.init_state(16, AREA, rng)
+        return model.step_many(pos, st_m, ticks, 1.0, AREA, rng)[0]
+
+    want = roll(11)
+    monkeypatch.setattr(mm, "MAX_DRAW_DOUBLES", 16 * 3)   # 1 tick per block
+    np.testing.assert_array_equal(roll(11), want)
+
+
+@pytest.mark.parametrize("mobility", ["random_waypoint", "gauss_markov"])
+def test_advance_schedule_independent_of_call_pattern(mobility):
+    """Regression for the partial-tick draw-schedule bug:
+    ``advance_to(t1); advance_to(t2)`` must consume exactly the same
+    mobility RNG schedule — and land on the same positions — as a single
+    ``advance_to(t2)``."""
+    kw = dict(n_cells=4, seed=9, mobility=mobility, speed_mps=25.0)
+    net_a = MultiCellNetwork.drop(WirelessConfig(), 64, **kw)
+    net_b = MultiCellNetwork.drop(WirelessConfig(), 64, **kw)
+    for t in (1.3, 2.7, 4.0, 9.9):        # partial and exact tick boundaries
+        net_a.advance_to(t)
+    net_b.advance_to(9.9)
+    np.testing.assert_array_equal(net_a.positions, net_b.positions)
+    np.testing.assert_array_equal(net_a.assoc, net_b.assoc)
+    np.testing.assert_array_equal(net_a.distances, net_b.distances)
+    assert net_a._ticks == net_b._ticks == 9
+    assert net_a.time == net_b.time == 9.9
+    # the auxiliary streams are in the same state afterwards
+    assert net_a.mob_rng.random() == net_b.mob_rng.random()
+
+
+def test_sub_tick_advance_is_pure_clock_update():
+    net = MultiCellNetwork.drop(WirelessConfig(), 16, n_cells=2, seed=0,
+                                mobility="random_waypoint", speed_mps=30.0)
+    p0, d0 = net.positions.copy(), net.distances.copy()
+    assert net.advance_to(0.9) == []
+    np.testing.assert_array_equal(net.positions, p0)
+    np.testing.assert_array_equal(net.distances, d0)
+    assert net.time == 0.9 and net._ticks == 0
+    assert net.advance_to(1.0) != [] or net._ticks == 1   # tick completes
+
+
+def test_unknown_reassoc_mode_rejected():
+    with pytest.raises(ValueError, match="reassoc"):
+        MultiCellNetwork.drop(WirelessConfig(), 8, n_cells=2,
+                              reassoc="psychic")
+
+
+# ---------------------------------------------------------------------------
+# safe-radius incremental ≡ full [n, k] recompute (bitwise)
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10), st.sampled_from([5.0, 30.0, 90.0]),
+       st.integers(2, 5),
+       st.sampled_from(["nearest", "load_aware"]),
+       st.sampled_from(["random_waypoint", "gauss_markov"]))
+@settings(max_examples=12, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_safe_radius_bitwise_equals_full_recompute(seed, speed, n_cells,
+                                                   association, mobility):
+    kw = dict(n_cells=n_cells, seed=seed, mobility=mobility,
+              speed_mps=speed, association=association,
+              cell_bandwidth_hz=(2e6,) + (5e5,) * (n_cells - 1))
+    inc = MultiCellNetwork.drop(WirelessConfig(), 48, reassoc="safe_radius",
+                                **kw)
+    ref = MultiCellNetwork.drop(WirelessConfig(), 48, reassoc="full", **kw)
+    times = np.cumsum(np.random.default_rng(seed).uniform(0.3, 4.0, size=12))
+    for t in times:
+        ev_inc = inc.advance_to(float(t))
+        ev_ref = ref.advance_to(float(t))
+        assert ev_inc == ev_ref
+        np.testing.assert_array_equal(inc.positions, ref.positions)
+        np.testing.assert_array_equal(inc.assoc, ref.assoc)
+        np.testing.assert_array_equal(inc.distances, ref.distances)
+    assert inc.handovers == ref.handovers
+
+
+def test_safe_radius_skips_rescoring_settled_ues():
+    """The point of the margins: once established, slow UEs far from any
+    cell boundary are not re-scored (their anchors stay put)."""
+    net = MultiCellNetwork.drop(WirelessConfig(), 256, n_cells=4, seed=3,
+                                mobility="random_waypoint", speed_mps=1.0)
+    net.advance_to(1.0)                   # establishes margins/anchors
+    anchors = net._anchor.copy()
+    net.advance_to(2.0)                   # 1 m of movement ≪ most margins
+    assert (net._margin > 0).any()
+    settled = np.isclose(net._anchor, anchors).all(axis=1)
+    assert settled.sum() > 128            # most UEs untouched
+
+
+# ---------------------------------------------------------------------------
+# batched eval
+# ---------------------------------------------------------------------------
+
+def _uniform_clients(n, test_size=16, seed=0):
+    """Clients whose train/test shapes all match (one vmap group)."""
+    out = []
+    for ci, c in enumerate(partition_noniid(_DATA, n, l=4, seed=seed)):
+        test = {k: v[:test_size] for k, v in _DATA.items()}
+        out.append(ClientDataset(data=c.data, test=test,
+                                 labels_held=c.labels_held,
+                                 rng=np.random.default_rng(100 + ci)))
+    return out
+
+
+def test_eval_many_matches_sequential_and_is_one_dispatch():
+    fl = _fl_cfg()
+    engine = SimulationEngine(_MODEL, fl, "perfed")
+    params = _MODEL.init(jax.random.PRNGKey(0))
+    clients = _uniform_clients(6)
+    batches = [{"inner": c.sample(fl.inner_batch), "outer": dict(c.test)}
+               for c in clients]
+    rngs = list(jax.random.split(jax.random.PRNGKey(7), len(clients)))
+
+    want = [engine.eval_one(params, b, r) for b, r in zip(batches, rngs)]
+    d0 = engine.eval_dispatches
+    pl, gl, ac = engine.eval_many(params, batches, rngs)
+    assert engine.eval_dispatches - d0 == 1      # whole cohort, one dispatch
+    np.testing.assert_allclose(pl, [float(p) for p, _, _ in want], rtol=1e-6)
+    np.testing.assert_allclose(gl, [float(g) for _, g, _ in want], rtol=1e-6)
+
+
+def test_eval_many_heterogeneous_shapes_fall_back_bitwise():
+    """Singleton shape groups ride the same jitted scalar eval as the
+    sequential path — distinct-shape cohorts reproduce it bit for bit."""
+    fl = _fl_cfg()
+    engine = SimulationEngine(_MODEL, fl, "perfed")
+    params = _MODEL.init(jax.random.PRNGKey(1))
+    clients = partition_noniid(_DATA, 4, l=4, seed=2)
+    batches = [{"inner": c.sample(fl.inner_batch), "outer": dict(c.test)}
+               for c in clients]
+    sizes = {len(next(iter(b["outer"].values()))) for b in batches}
+    assert len(sizes) > 1                 # actually heterogeneous
+    rngs = list(jax.random.split(jax.random.PRNGKey(8), len(clients)))
+    want = [engine.eval_one(params, b, r) for b, r in zip(batches, rngs)]
+    pl, gl, ac = engine.eval_many(params, batches, rngs)
+    np.testing.assert_array_equal(pl, [float(p) for p, _, _ in want])
+    np.testing.assert_array_equal(gl, [float(g) for _, g, _ in want])
+
+
+def test_driver_eval_point_costs_one_dispatch():
+    cfg = ExperimentConfig(model=get_config("mnist_dnn"), fl=_fl_cfg())
+    engine = SimulationEngine(_MODEL, cfg.fl, "perfed")
+    clients = _uniform_clients(8)
+    res = run_simulation(cfg, _MODEL, clients, algorithm="perfed",
+                         mode="semi", max_rounds=4, eval_every=2, seed=0,
+                         engine=engine)
+    n_eval_points = len(res.times)
+    assert n_eval_points >= 2
+    assert engine.eval_dispatches == n_eval_points
+    assert np.isfinite(res.losses).all()
+
+
+# ---------------------------------------------------------------------------
+# batched departed-UE restarts
+# ---------------------------------------------------------------------------
+
+def test_departed_restarts_priced_as_one_batch(monkeypatch):
+    """Force TWO mid-flight handovers out of cell 0; their uploads close
+    cell 0's round in one drain, so the driver must price both restart
+    cycles with a single ``cycle_durations`` call."""
+    from repro.fl.mobile import MobileAdapter
+
+    n = 12                                # seed-0 drop: 6 UEs per cell
+    cfg = ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        fl=_fl_cfg(n=n, eta_mode="distance"),
+        mobility=MobilityConfig(enabled=True, model="static", speed_mps=0.0,
+                                n_cells=2, hierarchy=True,
+                                cell_participants=2, cloud_sync_every=0))
+    state = {"calls": 0, "moved": []}
+    orig = MultiCellNetwork.advance_to
+
+    def patched(self, t):
+        events = orig(self, t)
+        state["calls"] += 1
+        if not state["moved"] and state["calls"] >= 1:
+            members = np.nonzero(self.assoc == 0)[0]
+            if len(members) > 3:          # keep cell 0 able to close rounds
+                for u in members[:2]:
+                    self.assoc[int(u)] = 1
+                    self.handovers += 1
+                    state["moved"].append(int(u))
+                    events = events + [(int(u), 0, 1)]
+        return events
+
+    monkeypatch.setattr(MultiCellNetwork, "advance_to", patched)
+    priced = []
+    orig_pre = MobileAdapter.pre_requeue
+    monkeypatch.setattr(
+        MobileAdapter, "pre_requeue",
+        lambda self, ues: (priced.append([int(u) for u in ues]),
+                           orig_pre(self, ues))[1])
+    clients = partition_noniid(_DATA, n, l=4, seed=0)
+    res = run_simulation(cfg, _MODEL, clients, algorithm="perfed",
+                         mode="semi", bandwidth_policy="equal", max_rounds=8,
+                         eval_every=0, seed=0, payload_mode="sequential")
+    assert len(state["moved"]) == 2 and res.departed_arrivals >= 2
+    # both departed UEs restarted TOGETHER: one pricing call covers the set
+    assert any(sorted(call) == sorted(state["moved"]) for call in priced)
+    # liveness: neither departed UE vanished from the schedule
+    for u in state["moved"]:
+        assert res.pi[:, u].sum() >= 1
+
+
+# ---------------------------------------------------------------------------
+# block-chunked fading draws
+# ---------------------------------------------------------------------------
+
+def test_chunked_fading_bitwise_equals_single_draw(monkeypatch):
+    from benchmarks.requeue import PricingShim, legacy_durations
+    from repro.fl import driver as drv
+    from repro.wireless.channel import EdgeNetwork
+
+    wl = WirelessConfig()
+    n = 64
+    net_a = EdgeNetwork.drop(wl, n, seed=11)
+    net_b = EdgeNetwork.drop(wl, n, seed=11)
+    bw = np.full(n, wl.total_bandwidth_hz / n)
+    d_i = np.full(n, 24)
+    monkeypatch.setattr(drv, "FADING_BLOCK", 5 * n)   # 5-row blocks
+    fn = drv.make_cycle_duration_fn(PricingShim(net_a, bw), wl, 1e6, d_i)
+    for k in (n, 17, 3):                  # spans multiple blocks, then not
+        ues = np.arange(n)[:k]
+        got = fn(ues)
+        want = legacy_durations(net_b, wl, bw, d_i, 1e6, ues)
+        np.testing.assert_array_equal(got, want)
