@@ -216,6 +216,15 @@ class WirelessConfig:
     cpu_cycles_per_sample: float = 2e5   # c_i
     cpu_freq_hz: float = 1e9             # ϑ_i nominal (heterogeneity multiplies this)
     cpu_hetero: float = 4.0              # max/min CPU speed ratio across UEs
+    # fading RNG stream for cycle pricing:
+    #   legacy  — per-requeue [k, n] Rayleigh matrix off the main numpy
+    #             stream, bitwise identical to the original per-UE loop
+    #             (the parity-suite reference);
+    #   counter — lane-indexed counter-based draws (splitmix64 → inverse
+    #             Rayleigh CDF), O(k) per requeue independent of n.  Same
+    #             marginal distribution, different bitstream — goldens for
+    #             this stream are pinned separately.
+    rng: str = "legacy"                  # legacy | counter
 
 
 @dataclass(frozen=True)

@@ -115,6 +115,70 @@ class HierarchicalServer:
             return None
         return self._finish(c, res)
 
+    def on_arrival_batch(self, cells: np.ndarray, ues: np.ndarray,
+                         payloads: Any) -> Optional[Dict[str, Any]]:
+        """Multi-cell segment feed of one drained batch (payloads stacked
+        in lane order — the driver's batch-wise path).
+
+        The drain invariant makes this simple: at most ONE round closes
+        per drain and its closing arrival is the batch's LAST lane.  So
+        lanes are fed per cell with the last lane's cell processed LAST —
+        every other cell's visiting-staleness reads of round clocks happen
+        before the close can advance one.  Departed lanes get a transient
+        visiting version for the τ weighting, reverted to NON_MEMBER
+        unless they are the literal closing arrival — whose stamp the
+        per-arrival path lets ``_advance_round``'s staleness snapshot see
+        (``_finish`` strips it from membership afterwards either way).
+        """
+        cells = np.asarray(cells, dtype=np.int64)
+        ues = np.asarray(ues, dtype=np.int64)
+        last_cell = int(cells[-1])
+        order = [c for c in dict.fromkeys(int(x) for x in cells)
+                 if c != last_cell] + [last_cell]
+        lanes_of = [np.nonzero(cells == c)[0] for c in order]
+
+        def seg_of(ln: np.ndarray) -> Any:
+            """Per-cell rows of the stacked payloads, in lane (arrival)
+            order — a contiguous slice when the driver cell-sorted the
+            batch (its fast path), one gather per cell otherwise.
+            Payload trees are [k, model]-sized, so avoiding whole-tree
+            copies here is what keeps the feed device-bound."""
+            if len(ln) == len(ues):
+                return payloads
+            if int(ln[-1]) - int(ln[0]) + 1 == len(ln):    # contiguous
+                lo, hi = int(ln[0]), int(ln[-1]) + 1
+                return jax.tree.map(lambda x: x[lo:hi], payloads)
+            lj = jnp.asarray(ln)
+            return jax.tree.map(
+                lambda x: jnp.take(jnp.asarray(x), lj, axis=0), payloads)
+
+        result: Optional[Dict[str, Any]] = None
+        for c, lanes in zip(order, lanes_of):
+            seg = seg_of(lanes)
+            srv = self.cells[c]
+            cus = ues[lanes]
+            departed = [int(u) for u in cus
+                        if int(self.member_cell[u]) != c]
+            for u in departed:
+                self.departed_arrivals += 1
+                srv.ue_version[u] = self._visiting_version(c, u)
+            taus = srv.round - srv.ue_version[cus]      # τ at arrival
+            final = int(ues[-1]) if c == last_cell else None
+            for u in departed:
+                if u != final:
+                    srv.ue_version[u] = NON_MEMBER
+            res = srv.on_arrival_batch(cus, seg, taus=taus)
+            if res is None:
+                # possible only when the drain ended on heap exhaustion —
+                # then the last lane closed nothing, so revert its stamp
+                if final is not None and final in departed:
+                    srv.ue_version[final] = NON_MEMBER
+                continue
+            assert c == last_cell, "drain invariant: only the last lane's " \
+                                   "cell may close a round"
+            result = self._finish(c, res)
+        return result
+
     def on_round_batch(self, c: int, ues: Sequence[int],
                        aggregate_fn: Callable) -> Dict[str, Any]:
         srv = self.cells[c]

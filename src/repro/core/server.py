@@ -48,6 +48,10 @@ class SemiSyncServer:
         self.ue_version = np.zeros(cfg.n_ues, dtype=np.int64)
         # (ue, payload, staleness-at-arrival) per pending upload
         self._pending: List[Tuple[int, Any, int]] = []
+        # segment-pending uploads from the batch-wise feed: (ues, taus,
+        # stacked payload tree) per drained batch, concatenated at close
+        self._pending_seg: List[Tuple[np.ndarray, np.ndarray, Any]] = []
+        self._seg_n = 0                  # lanes across _pending_seg (O(1))
         # bookkeeping for analysis / tests
         self.history_pi: List[np.ndarray] = []       # realised Π rows
         self.history_staleness: List[np.ndarray] = []
@@ -60,7 +64,7 @@ class SemiSyncServer:
         cancellation can happen — which is exactly what lets the simulator
         drain that many events and compute their payloads as one batch.
         """
-        return self.a - len(self._pending)
+        return self.a - len(self._pending) - self._seg_n
 
     def staleness(self, ue: int) -> int:
         """τ_k^i — rounds since UE i last received the global model."""
@@ -71,10 +75,12 @@ class SemiSyncServer:
         once the A-th payload arrives, applies the global update and returns
         {"round", "distribute": [ue...], "params"}.
         """
+        if self._pending_seg:
+            raise RuntimeError("segment uploads pending; feed rounds "
+                               "through on_arrival_batch consistently")
         self._pending.append((ue, payload, self.staleness(ue)))
         if len(self._pending) < self.a:
             return None
-
         arrived = self._pending
         self._pending = []
         # --- Eq. (8): w_{k+1} = w_k − β/A Σ_{i∈A_k} ∇̃F_i(w_{k−τ_k^i}),
@@ -85,6 +91,54 @@ class SemiSyncServer:
             self.params, [g for _, g, _ in arrived],
             jnp.asarray(mask, jnp.float32), beta=self.cfg.beta)
         return self._advance_round([i for i, _, _tau in arrived])
+
+    def on_arrival_batch(self, ues: np.ndarray, payloads: Any,
+                         taus: Optional[np.ndarray] = None
+                         ) -> Optional[Dict[str, Any]]:
+        """Segment feed: one drained batch of uploads with the payloads
+        STACKED (leading lane axis, arrival order) — the batch-wise
+        driver path.
+
+        Returns ``None`` while the round stays open.  On the segment
+        whose last lane is the A-th pending upload, the pending segments
+        are concatenated in arrival order and Eq. (8) runs ONCE over the
+        stacked tree — the summation order (stacked row order) is exactly
+        the per-arrival path's, so trajectories match.  The driver's
+        drain invariant guarantees a segment never overshoots A (the
+        drain breaks on the closing arrival); ``taus`` overrides the
+        staleness-at-arrival vector (the hierarchy stamps transient
+        visiting versions and must snapshot τ before reverting them).
+        """
+        if self._pending:
+            raise RuntimeError("per-arrival uploads pending; feed rounds "
+                               "through on_arrival consistently")
+        ues = np.asarray(ues, dtype=np.int64)
+        if taus is None:
+            taus = self.round - self.ue_version[ues]
+        self._pending_seg.append((ues, np.asarray(taus, np.int64), payloads))
+        self._seg_n += len(ues)
+        if self._seg_n > self.a:
+            raise RuntimeError(f"segment overshoots A={self.a}: "
+                               f"{self._seg_n} lanes pending")
+        if self._seg_n < self.a:
+            return None
+
+        segs = self._pending_seg
+        self._pending_seg, self._seg_n = [], 0
+        all_ues = np.concatenate([u for u, _, _ in segs])
+        all_taus = np.concatenate([t for _, t, _ in segs])
+        mask = self._weights(all_taus)
+        if len(segs) == 1:
+            stacked = segs[0][2]
+        else:
+            stacked = jax.tree.map(
+                lambda *xs: jnp.concatenate(
+                    [jnp.asarray(x) for x in xs], axis=0),
+                *[p for _, _, p in segs])
+        self.params = stale_aggregate_tree(
+            self.params, stacked, jnp.asarray(mask, jnp.float32),
+            beta=self.cfg.beta)
+        return self._advance_round([int(u) for u in all_ues])
 
     def on_round_batch(self, ues: Sequence[int],
                        aggregate_fn: Callable) -> Dict[str, Any]:
@@ -97,8 +151,9 @@ class SemiSyncServer:
         Π, staleness, the distribution rule — stays here, identical to the
         per-arrival path.
         """
-        if self._pending:
-            raise RuntimeError("pending uploads exist; use on_arrival")
+        if self._pending or self._pending_seg:
+            raise RuntimeError("pending uploads exist; use on_arrival / "
+                               "on_arrival_batch")
         if len(ues) != self.a:
             raise ValueError(f"round batch needs exactly A={self.a} uploads, "
                              f"got {len(ues)}")

@@ -50,6 +50,39 @@ class ClientDataset:
                 "hessian": {k: v[s_in + s_o:] for k, v in full.items()}}
 
 
+def sample_triplet_many(clients: List[ClientDataset], b_in: int, b_o: int,
+                        b_h: int) -> Dict[str, Dict[str, np.ndarray]]:
+    """Stacked ``sample_triplet`` for several clients in ONE pass.
+
+    Returns the same ``{"inner"/"outer"/"hessian": {field: array}}`` layout
+    with a leading client axis, gathered straight into preallocated stacked
+    buffers — the batch-wise driver feed hands these to the engine without
+    re-stacking per lane.  Each client consumes exactly the one
+    ``rng.integers`` call ``sample_triplet`` would, in list order, so the
+    result is bitwise identical to the per-UE loop (each ``ClientDataset``
+    owns a private generator).  All clients must share triplet sizes and
+    field shapes (the driver groups lanes by shape signature first).
+    """
+    if not clients:
+        raise ValueError("sample_triplet_many needs at least one client")
+    s_in, s_o, s_h = clients[0].triplet_sizes(b_in, b_o, b_h)
+    total = s_in + s_o + s_h
+    m = len(clients)
+    stacked: Dict[str, np.ndarray] = {
+        k: np.empty((m, total) + v.shape[1:], dtype=v.dtype)
+        for k, v in clients[0].data.items()}
+    for i, c in enumerate(clients):
+        if c.triplet_sizes(b_in, b_o, b_h) != (s_in, s_o, s_h):
+            raise ValueError("sample_triplet_many: mixed triplet sizes — "
+                             "group clients by shape signature first")
+        idx = c.rng.integers(0, len(c), size=total)
+        for k, v in c.data.items():
+            np.take(v, idx, axis=0, out=stacked[k][i])
+    return {"inner": {k: v[:, :s_in] for k, v in stacked.items()},
+            "outer": {k: v[:, s_in:s_in + s_o] for k, v in stacked.items()},
+            "hessian": {k: v[:, s_in + s_o:] for k, v in stacked.items()}}
+
+
 def partition_noniid(data: Dict[str, np.ndarray], n_clients: int, l: int,
                      *, n_classes: Optional[int] = None, seed: int = 0,
                      label_key: str = "y", test_frac: float = 0.2,

@@ -55,7 +55,7 @@ import jax
 import numpy as np
 
 from repro.config import ExperimentConfig
-from repro.data.partition import ClientDataset
+from repro.data.partition import ClientDataset, sample_triplet_many
 from repro.fl.engine import SimulationEngine, ensure_engine
 from repro.wireless.channel import noise_w_per_hz, pathloss_pow
 from repro.wireless.timing import compute_times, model_bits, upload_times
@@ -129,6 +129,13 @@ class TopologyAdapter:
                    payload: Any) -> Optional[Dict[str, Any]]:
         raise NotImplementedError
 
+    def on_arrival_batch(self, cells: np.ndarray, ues: np.ndarray,
+                         payloads: Any) -> Optional[Dict[str, Any]]:
+        """Batch-wise feed: one drained batch, payloads STACKED (leading
+        lane axis, arrival order).  At most one round closes — on the
+        last lane (drain invariant) — and its result dict is returned."""
+        raise NotImplementedError
+
     def on_round_batch(self, cell: int, ues: List[int],
                        aggregate_fn: Callable) -> Dict[str, Any]:
         raise NotImplementedError
@@ -151,6 +158,12 @@ class TopologyAdapter:
         are routed back to this cell even if the UE hands over while the
         upload is in flight."""
         return 0
+
+    def dispatch_cells(self, ues: np.ndarray) -> np.ndarray:
+        """Vectorized ``dispatch_cell`` — the driver stamps whole
+        requeues (and checks whole drains for mid-flight handovers) in
+        one call instead of one python call per UE."""
+        return np.zeros(len(ues), dtype=np.int64)
 
     def advance_to(self, t: float) -> None:
         """Move simulated time forward (mobility, handovers, bookkeeping)."""
@@ -201,8 +214,14 @@ def make_cycle_duration_fn(adapter: TopologyAdapter, wl, z_bits: float,
         cache["src"], cache["pw"] = None, None
         return pathloss_pow(np.asarray(dists)[idx], kappa)
 
+    counter_rng = getattr(wl, "rng", "legacy") == "counter"
+
     def _fading_lanes(idx: np.ndarray) -> np.ndarray:
-        # one [k, n] draw, materialised in row blocks of ≤ FADING_BLOCK
+        if counter_rng:
+            # counter stream: O(k) lane-indexed draws — no [k, n] matrix,
+            # no dependence on how the event loop batches its pricing
+            return net.fading_lanes(idx)
+        # legacy stream: one [k, n] draw, in row blocks of ≤ FADING_BLOCK
         # doubles: numpy Generators fill arrays from the bitstream
         # sequentially, so the blocks are bitwise the single big call —
         # without the O(k·n) peak memory (an [n, n] matrix at the initial
@@ -305,14 +324,17 @@ def run_event_loop(cfg: ExperimentConfig, model,
     # the UE ABANDONS the stale computation and restarts — the old event is
     # dropped at pop time if its epoch is outdated.
     # event = (t_finish, seq, ue, version, duration, epoch, dispatch_cell)
-    heap: List[Tuple[float, int, int, int, float, int, int]] = []
     epoch = np.zeros(n, dtype=np.int64)
-    seq = 0
     all_ues = np.arange(n)
-    for i, dur in zip(all_ues, cycle_durations(all_ues)):
-        heapq.heappush(heap, (float(dur), seq, int(i), 0, float(dur), 0,
-                              adapter.dispatch_cell(int(i))))
-        seq += 1
+    fill_cells = adapter.dispatch_cells(all_ues)
+    # events are totally ordered by (t, seq), so heapify yields the exact
+    # pop sequence of n pushes at a fraction of the fill cost
+    heap: List[Tuple[float, int, int, int, float, int, int]] = [
+        (float(dur), i, int(i), 0, float(dur), 0, int(c))
+        for i, (dur, c) in enumerate(zip(cycle_durations(all_ues),
+                                         fill_cells))]
+    heapq.heapify(heap)
+    seq = n
 
     times, plosses, glosses, accs, rounds_at = [], [], [], [], []
     t_now = 0.0
@@ -341,11 +363,12 @@ def run_event_loop(cfg: ExperimentConfig, model,
         items = [it for it in items if it[0] not in redistributed]
         if not items:
             return
-        for (ue, t0), dur in zip(items,
-                                 cycle_durations([u for u, _ in items])):
-            heapq.heappush(heap, (t0 + float(dur), seq, ue,
-                                  adapter.rounds_done(), float(dur),
-                                  int(epoch[ue]), adapter.dispatch_cell(ue)))
+        cells_r = adapter.dispatch_cells([u for u, _ in items])
+        durs_r = cycle_durations([u for u, _ in items])
+        version = adapter.rounds_done()
+        for (ue, t0), dur, dc in zip(items, durs_r, cells_r):
+            heapq.heappush(heap, (t0 + float(dur), seq, ue, version,
+                                  float(dur), int(epoch[ue]), int(dc)))
             seq += 1
 
     redistributed: set = set()          # UEs given a new cycle this drain
@@ -357,12 +380,13 @@ def run_event_loop(cfg: ExperimentConfig, model,
             redistributed.update(int(i) for i in dist)
             for i in dist:
                 held_params[i] = result["params"]
-                epoch[i] += 1           # cancels any in-flight computation
-            for i, dur_i in zip(dist, cycle_durations(dist)):
-                heapq.heappush(heap, (t_now + float(dur_i), seq, i,
+            dist_arr = np.asarray(dist, dtype=np.int64)
+            epoch[dist_arr] += 1        # cancels any in-flight computation
+            cells_d = adapter.dispatch_cells(dist_arr)
+            for i, dur_i, dc in zip(dist, cycle_durations(dist), cells_d):
+                heapq.heappush(heap, (t_now + float(dur_i), seq, int(i),
                                       result["round"], float(dur_i),
-                                      int(epoch[i]),
-                                      adapter.dispatch_cell(i)))
+                                      int(epoch[i]), int(dc)))
                 seq += 1
         k = result["round"]
         if do_eval and (k % eval_every == 0 or k == max_rounds):
@@ -403,22 +427,25 @@ def run_event_loop(cfg: ExperimentConfig, model,
             break
 
         held = [held_params[ue] for _, ue, _, _, _ in batch]
-        triplets = [clients[ue].sample_triplet(fl.inner_batch, fl.outer_batch,
-                                               fl.hessian_batch)
-                    for _, ue, _, _, _ in batch]
         a_i = [alphas[ue] for _, ue, _, _, _ in batch]
+        ues_arr = np.fromiter((b[1] for b in batch), np.int64,
+                              count=len(batch))
+        cells_arr = np.fromiter((b[4] for b in batch), np.int64,
+                                count=len(batch))
 
         srv_a = adapter.participants(closing) if closing is not None else -1
         if (engine.payload_mode == "batched" and len(batch) == srv_a
                 and srv_a <= engine.max_bucket
                 and all(b[4] == closing for b in batch)
-                and len({batch_sig[ue] for _, ue, _, _, _ in batch}) == 1):
+                and len({batch_sig[ue] for ue in ues_arr}) == 1):
             # fused fast path: the whole round of the closing cell — per-
             # arrival RNG, vmapped payloads, Eq. (8) stale aggregation —
             # fuses into one device dispatch per model-version group
-            for t, ue, _sq, dur, _c in batch:
-                t_now = t
-                busy_time[ue] += dur    # only completed cycles count as busy
+            triplets = [clients[ue].sample_triplet(
+                fl.inner_batch, fl.outer_batch, fl.hessian_batch)
+                for ue in ues_arr]
+            t_now = batch[-1][0]
+            busy_time[ues_arr] += [b[3] for b in batch]   # completed cycles
 
             def aggregate(params, weights):
                 return engine.round_update(
@@ -427,10 +454,15 @@ def run_event_loop(cfg: ExperimentConfig, model,
                     a_i, weights, beta=fl.beta, base_key=payload_key)
 
             handle(adapter.on_round_batch(
-                closing, [ue for _, ue, _, _, _ in batch], aggregate))
-            restart_departed([(ue, t) for t, ue, _sq, _dur, cell
-                              in batch if adapter.dispatch_cell(ue) != cell])
-        else:
+                closing, [int(ue) for ue in ues_arr], aggregate))
+            moved = np.nonzero(
+                adapter.dispatch_cells(ues_arr) != cells_arr)[0]
+            restart_departed([(int(ues_arr[i]), batch[i][0])
+                              for i in moved])
+        elif engine.payload_mode == "sequential":
+            triplets = [clients[ue].sample_triplet(
+                fl.inner_batch, fl.outer_batch, fl.hessian_batch)
+                for ue in ues_arr]
             payloads = engine.compute_payloads(
                 held, triplets,
                 [jax.random.fold_in(payload_key, sq)
@@ -447,6 +479,76 @@ def run_event_loop(cfg: ExperimentConfig, model,
                 if adapter.dispatch_cell(ue) != cell:
                     restarts.append((ue, t))
             restart_departed(restarts)
+        else:
+            # ---- batch-wise feed: payloads stay stacked on device ----------
+            # lanes grouped by batch-shape signature; each group samples its
+            # triplets STACKED (one RNG draw + gather per client — bitwise
+            # the per-UE loop, the generators are private) and the engine
+            # returns ONE stacked payload tree that goes to the protocol
+            # whole: no per-lane tree.map extraction, no per-arrival
+            # on_arrival python loop
+            t_now = batch[-1][0]
+            orig_pos = None
+            sig_of = [batch_sig[ue] for ue in ues_arr]
+            cell_sorted = closing is not None and adapter.n_protocol_cells > 1
+            if cell_sorted:
+                # sort lanes by (cell, signature), stable, closing cell
+                # LAST: the hierarchy slices per-cell segments out of the
+                # stacked payloads contiguously, and each cell×signature
+                # run is one contiguous engine group — no whole-tree
+                # gather or inverse permute anywhere (payload trees are
+                # [k, model]-sized, so every avoided copy counts).  Within
+                # a (cell, signature) run arrival order is preserved;
+                # summation order changes only for a cell with mixed
+                # signatures (tolerance-level, never golden-pinned)
+                cell_keys = np.where(cells_arr == closing,
+                                     np.iinfo(np.int64).max, cells_arr)
+                sig_ids: Dict[Tuple, int] = {}
+                sig_rank = np.fromiter(
+                    (sig_ids.setdefault(s, len(sig_ids)) for s in sig_of),
+                    np.int64, count=len(sig_of))
+                perm = np.lexsort((sig_rank, cell_keys))
+                if not np.array_equal(perm, np.arange(len(batch))):
+                    orig_pos = perm
+                    batch = [batch[i] for i in perm]
+                    ues_arr = ues_arr[perm]
+                    cells_arr = cells_arr[perm]
+                    held = [held[i] for i in perm]
+                    a_i = [a_i[i] for i in perm]
+                    sig_of = [sig_of[i] for i in perm]
+            if cell_sorted:
+                # contiguous runs of equal signature, in feed order
+                lane_groups: List[List[int]] = []
+                start = 0
+                for i in range(1, len(sig_of) + 1):
+                    if i == len(sig_of) or sig_of[i] != sig_of[start]:
+                        lane_groups.append(list(range(start, i)))
+                        start = i
+            else:
+                sig_groups: Dict[Tuple, List[int]] = {}
+                for lane, s in enumerate(sig_of):
+                    sig_groups.setdefault(s, []).append(lane)
+                lane_groups = list(sig_groups.values())
+            groups = [(lanes, sample_triplet_many(
+                           [clients[int(ues_arr[i])] for i in lanes],
+                           fl.inner_batch, fl.outer_batch, fl.hessian_batch))
+                      for lanes in lane_groups]
+            payloads_stacked = engine.compute_payloads_stacked(
+                held, groups, [sq for _, _, sq, _, _ in batch], a_i,
+                payload_key)
+            busy_time[ues_arr] += [b[3] for b in batch]   # completed cycles
+            result = adapter.on_arrival_batch(cells_arr, ues_arr,
+                                              payloads_stacked)
+            if result is not None:
+                handle(result)
+            moved = np.nonzero(
+                adapter.dispatch_cells(ues_arr) != cells_arr)[0]
+            if orig_pos is not None:
+                # restarts price fading in list order — restore the drain
+                # arrival order the per-arrival path uses
+                moved = moved[np.argsort(orig_pos[moved])]
+            restart_departed([(int(ues_arr[i]), batch[i][0])
+                              for i in moved])
 
     # drain the async dispatch queue so wall-clock timings of this function
     # include all device work it issued (jit dispatch is asynchronous)

@@ -90,6 +90,11 @@ def _shape_signature(batches: Any) -> Tuple:
                            for x in leaves))
 
 
+def _leading_len(tree: Any) -> int:
+    """Length of the leading (lane) axis of a stacked batch tree."""
+    return int(jax.tree_util.tree_leaves(tree)[0].shape[0])
+
+
 def _stack_trees(trees: Sequence[Any]):
     def stack(*xs):
         if all(isinstance(x, np.ndarray) for x in xs):
@@ -117,6 +122,8 @@ class SimulationEngine:
         # one jitted vmapped callable; jit's cache keys on input shapes, so
         # it holds exactly one entry per (bucket size, batch signature)
         self._batched = jax.jit(jax.vmap(self._raw, in_axes=(0, 0, 0, 0)))
+        self._batched_keyed = None
+        self._batched_keyed_shared = None
         self._round_fns: Dict[TreeFlattener, Any] = {}
         self._group_fn = None
         self._combine_fn = None
@@ -225,6 +232,16 @@ class SimulationEngine:
 
         results: List[Any] = [None] * m
         for idx in groups.values():
+            if len(idx) == 1:
+                # a singleton group rides the exact scalar jit (as
+                # eval_many does) — no bucket padding, no stack, no
+                # per-lane extraction
+                i = idx[0]
+                results[i] = self._single(params_list[i], batches_list[i],
+                                          rngs[i], float(alphas[i]))
+                self.dispatches += 1
+                self.payloads_computed += 1
+                continue
             for lo in range(0, len(idx), self.max_bucket):
                 self._run_bucket(idx[lo:lo + self.max_bucket], params_list,
                                  batches_list, rngs, alphas, results)
@@ -246,6 +263,137 @@ class SimulationEngine:
         self.payloads_computed += k
         for lane, i in enumerate(idx):
             results[i] = jax.tree.map(lambda x, lane=lane: x[lane], out)
+
+    # ------------------------------------------------------------------
+    # stacked payloads (batch-wise protocol feed)
+    # ------------------------------------------------------------------
+    def _get_batched_keyed(self):
+        """Like ``_batched`` but derives each lane's key INSIDE the jit
+        (``fold_in(base_key, seq)`` with the base key broadcast), so the
+        host never builds a per-lane key list."""
+        if self._batched_keyed is None:
+            raw = self._raw
+
+            def one(p, b, s, a, key):
+                return raw(p, b, jax.random.fold_in(key, s), a)
+
+            self._batched_keyed = jax.jit(
+                jax.vmap(one, in_axes=(0, 0, 0, 0, None)))
+        return self._batched_keyed
+
+    def _get_batched_keyed_shared(self):
+        """``_batched_keyed`` with the params BROADCAST (``in_axes=None``):
+        the common case is every lane of a drain holding the same model
+        version, where stacking k copies of the tree on the host costs
+        more than the payload math itself."""
+        if self._batched_keyed_shared is None:
+            raw = self._raw
+
+            def one(p, b, s, a, key):
+                return raw(p, b, jax.random.fold_in(key, s), a)
+
+            self._batched_keyed_shared = jax.jit(
+                jax.vmap(one, in_axes=(None, 0, 0, 0, None)))
+        return self._batched_keyed_shared
+
+    def compute_payloads_stacked(self, params_list: Sequence[Any],
+                                 groups: Sequence[Tuple[List[int], Any]],
+                                 seqs: Sequence[int],
+                                 alphas: Sequence[float],
+                                 base_key: jax.Array) -> Any:
+        """Payloads of one drained batch as ONE stacked pytree (leading
+        lane axis, drain arrival order) — the batch-wise feed's engine
+        entry: no per-lane payload tree is ever built, so the driver can
+        hand the result straight to ``on_arrival_batch``.
+
+        ``groups`` covers every lane exactly once as ``(lanes,
+        batches_stacked)`` pairs: ``lanes`` are global lane indices and
+        ``batches_stacked`` the matching client batches with a leading
+        lane axis (``data.partition.sample_triplet_many``).
+        ``params_list``/``seqs``/``alphas`` stay per-lane.  Singleton
+        chunks ride the exact scalar ``_single`` jit.
+        """
+        m = len(params_list)
+        assert m == len(seqs) == len(alphas) and m > 0
+        parts: List[Any] = []
+        order: List[int] = []
+        for lanes, batches in groups:
+            for lo in range(0, len(lanes), self.max_bucket):
+                chunk = lanes[lo:lo + self.max_bucket]
+                rows = np.arange(lo, lo + len(chunk))
+                parts.append(self._stacked_bucket(
+                    chunk, rows, batches, params_list, seqs, alphas,
+                    base_key))
+                order.extend(chunk)
+        if order == list(range(m)):
+            # single signature: chunk order IS arrival order — concat only
+            # (no inverse-permute gather; these trees are [k, model]-sized)
+            if len(parts) == 1:
+                return parts[0]
+            return jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+        # concat in chunk order, then inverse-permute to arrival order —
+        # aggregation sums rows in stacked order, so this keeps the batch
+        # feed's summation order identical to the per-arrival path
+        pos = np.empty(m, dtype=np.int64)
+        pos[np.asarray(order, dtype=np.int64)] = np.arange(m)
+        return jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0)[pos], *parts)
+
+    def _stacked_bucket(self, chunk: List[int], rows: np.ndarray, batches,
+                        params_list, seqs, alphas, base_key) -> Any:
+        """One padded vmapped dispatch over ``chunk``; returns the valid
+        ``[k, ...]`` rows of the stacked payload output."""
+        k = len(chunk)
+        if k == 1:
+            i = chunk[0]
+            b = jax.tree.map(lambda x: x[rows[0]], batches)
+            out = self._single(params_list[i], b,
+                               jax.random.fold_in(base_key, int(seqs[i])),
+                               float(alphas[i]))
+            self.dispatches += 1
+            self.payloads_computed += 1
+            return jax.tree.map(lambda x: x[None], out)
+        bucket = bucket_size(k, self.max_bucket)
+        pad = list(chunk) + [chunk[0]] * (bucket - k)
+        # dedupe model versions by tree identity (distribution hands every
+        # lane of a version the SAME object): a drain holds at most
+        # ~staleness-bound distinct versions, so stacking per-version and
+        # gathering beats stacking k whole trees — and the usual
+        # single-version bucket skips params stacking entirely
+        uniq: List[Any] = []
+        vidx: List[int] = []
+        seen: Dict[int, int] = {}
+        for i in pad:
+            t = params_list[i]
+            j = seen.get(id(t))
+            if j is None:
+                j = seen[id(t)] = len(uniq)
+                uniq.append(t)
+            vidx.append(j)
+        if bucket == k and rows[0] == 0 and _leading_len(batches) == k:
+            batches_b = batches               # whole group, no padding
+        else:
+            ridx = np.concatenate(
+                [rows, np.full(bucket - k, rows[0], dtype=np.int64)])
+            batches_b = jax.tree.map(lambda x: x[ridx], batches)
+        seqs_b = jnp.asarray([int(seqs[i]) for i in pad], jnp.int32)
+        alphas_b = jnp.asarray([float(alphas[i]) for i in pad],
+                               jnp.float32)
+        if len(uniq) == 1:
+            out = self._get_batched_keyed_shared()(
+                uniq[0], batches_b, seqs_b, alphas_b, base_key)
+        else:
+            vj = jnp.asarray(vidx, jnp.int32)
+            params_b = jax.tree.map(
+                lambda *xs: jnp.stack(xs)[vj], *uniq)
+            out = self._get_batched_keyed()(params_b, batches_b, seqs_b,
+                                            alphas_b, base_key)
+        self.dispatches += 1
+        self.payloads_computed += k
+        if bucket == k:
+            return out
+        return jax.tree.map(lambda x: x[:k], out)
 
     # ------------------------------------------------------------------
     # fused round update (batched mode fast path)

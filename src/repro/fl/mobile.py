@@ -207,6 +207,11 @@ class MobileAdapter(TopologyAdapter):
             return self.hier.on_arrival(cell, ue, payload)
         return self.server.on_arrival(ue, payload)
 
+    def on_arrival_batch(self, cells, ues, payloads):
+        if self.hier is not None:
+            return self.hier.on_arrival_batch(cells, ues, payloads)
+        return self.server.on_arrival_batch(ues, payloads)
+
     def on_round_batch(self, cell, ues, aggregate_fn):
         if self.hier is not None:
             return self.hier.on_round_batch(cell, ues, aggregate_fn)
@@ -221,6 +226,12 @@ class MobileAdapter(TopologyAdapter):
         # if the UE hands over while the upload is in flight
         return int(self.net.assoc[ue]) if self.hier is not None else 0
 
+    def dispatch_cells(self, ues) -> np.ndarray:
+        ues = np.asarray(ues, dtype=np.int64)
+        if self.hier is not None:
+            return self.net.assoc[ues].astype(np.int64)
+        return np.zeros(len(ues), dtype=np.int64)
+
     def advance_to(self, t: float) -> None:
         for (u, src, dst) in self.net.advance_to(t):
             if self.hier is not None:
@@ -229,8 +240,14 @@ class MobileAdapter(TopologyAdapter):
             self._dirty_cells.add(dst)
 
     def pre_requeue(self, ues) -> None:
-        for i in ues:
-            c = int(self.net.assoc[i])
+        # vectorized: the common warm-path case (no membership change
+        # since the last pricing) exits on one set check instead of a
+        # python loop over every requeued lane
+        if not self._dirty_cells:
+            return
+        touched = np.unique(self.net.assoc[np.asarray(ues, dtype=np.int64)])
+        for c in touched:
+            c = int(c)
             if c in self._dirty_cells:
                 self._realloc(c)
                 self._dirty_cells.discard(c)

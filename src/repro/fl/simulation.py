@@ -78,6 +78,9 @@ class StaticAdapter(TopologyAdapter):
     def on_arrival(self, cell, ue, payload):
         return self.server.on_arrival(ue, payload)
 
+    def on_arrival_batch(self, cells, ues, payloads):
+        return self.server.on_arrival_batch(ues, payloads)
+
     def on_round_batch(self, cell, ues, aggregate_fn):
         return self.server.on_round_batch(ues, aggregate_fn)
 

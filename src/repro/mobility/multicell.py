@@ -62,7 +62,8 @@ import numpy as np
 from repro.config import WirelessConfig
 from repro.core.bandwidth import UEChannel
 from repro.mobility.models import Area, MobilityModel, get_mobility
-from repro.wireless.channel import make_channel, mean_rates_for
+from repro.wireless.channel import (CounterFadingMixin, make_channel,
+                                    mean_rates_for, validate_rng_mode)
 
 MIN_DIST_M = 5.0        # same floor as EdgeNetwork.drop
 _MOB_STREAM = 0x6D6F62  # "mob" — decorrelates the auxiliary stream
@@ -107,7 +108,7 @@ def cell_layout(n_cells: int, radius_m: float) -> np.ndarray:
 
 
 @dataclass
-class MultiCellNetwork:
+class MultiCellNetwork(CounterFadingMixin):
     """Time-varying geometry: positions, nearest-BS association, handovers."""
     cfg: WirelessConfig
     n_ues: int
@@ -144,6 +145,7 @@ class MultiCellNetwork:
              reassoc: str = "safe_radius") -> "MultiCellNetwork":
         if step_s <= 0.0:
             raise ValueError(f"step_s must be positive, got {step_s}")
+        validate_rng_mode(cfg.rng)
         if association not in ("nearest", "load_aware"):
             raise ValueError(f"unknown association policy {association!r}; "
                              f"known: ['load_aware', 'nearest']")
@@ -201,6 +203,7 @@ class MultiCellNetwork:
                   cell_bw=cell_bw, association=association,
                   load_penalty_m=load_penalty_m, reassoc=reassoc)
         net._mob_state = model.init_state(n_ues, area, mob_rng)
+        net._init_counter_fading(seed, n_ues)
         # safe-radius bookkeeping: zero margins force the first moving tick
         # to re-score everyone (and establish real margins); until a
         # load_aware best response is observed at a fixpoint its margins

@@ -1,0 +1,224 @@
+"""Counter-based fading RNG (``WirelessConfig.rng = "counter"``) and the
+batch-wise protocol feed.
+
+Three layers:
+
+* distribution — the splitmix64 → inverse-CDF stream must be Rayleigh to
+  moment- and KS-level accuracy (it replaces ``Generator.rayleigh`` draws
+  in cycle pricing);
+* determinism — a UE's j-th coefficient is a pure function of
+  (seed, ue, j), independent of how the event loop batches pricing calls;
+* trajectories — counter-stream goldens pinned bitwise on host math, the
+  legacy stream bitwise UNchanged (the pre-PR golden), and the batch-wise
+  feed reproducing the sequential per-arrival feed on static and
+  multi-cell hierarchy runs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.config import (ExperimentConfig, FLConfig, MobilityConfig,
+                          WirelessConfig)
+from repro.configs import get_config
+from repro.data import partition_noniid, synthetic_mnist
+from repro.fl.simulation import run_simulation
+from repro.models import build_model
+from repro.mobility.multicell import MultiCellNetwork
+from repro.wireless.channel import (EdgeNetwork, counter_fading_seed,
+                                    counter_rayleigh, validate_rng_mode)
+
+_DATA = synthetic_mnist(n=600, seed=21)
+_MODEL = build_model(get_config("mnist_dnn"))
+
+
+def _cfg(n=8, a=3, s=3, rng="legacy", **fl_kw):
+    return ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        wireless=WirelessConfig(rng=rng),
+        fl=FLConfig(n_ues=n, participants_per_round=a, staleness_bound=s,
+                    alpha=0.03, beta=0.07, inner_batch=8, outer_batch=8,
+                    hessian_batch=8, **fl_kw))
+
+
+def _clients(n=8, seed=0):
+    return partition_noniid(_DATA, n, l=4, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# distribution: the counter stream is Rayleigh
+# ---------------------------------------------------------------------------
+
+def _counter_sample(n=200_000, seed=7, scale=40.0):
+    base = counter_fading_seed(seed)
+    ues = np.arange(n) % 1024
+    counters = np.arange(n) // 1024
+    return counter_rayleigh(base, ues, counters, scale)
+
+
+def test_counter_rayleigh_moments():
+    scale = 40.0
+    h = _counter_sample(scale=scale)
+    assert (h > 0).all() and np.isfinite(h).all()
+    # Rayleigh(σ): mean σ√(π/2), var (2 − π/2)σ²
+    assert abs(h.mean() - scale * np.sqrt(np.pi / 2)) < 0.5
+    assert abs(h.var() - (2 - np.pi / 2) * scale ** 2) < 10.0
+
+
+def test_counter_rayleigh_ks_against_cdf():
+    """One-sample Kolmogorov–Smirnov against F(h) = 1 − exp(−h²/2σ²),
+    hand-rolled (scipy-free).  n = 2·10⁵ → the 1% critical value of the
+    KS statistic is 1.63/√n ≈ 0.00364."""
+    scale = 40.0
+    h = np.sort(_counter_sample(scale=scale))
+    n = len(h)
+    cdf = 1.0 - np.exp(-h * h / (2.0 * scale * scale))
+    emp_hi = np.arange(1, n + 1) / n
+    emp_lo = np.arange(0, n) / n
+    ks = max(np.abs(emp_hi - cdf).max(), np.abs(cdf - emp_lo).max())
+    assert ks < 1.63 / np.sqrt(n), f"KS statistic {ks:.5f}"
+
+
+def test_counter_rayleigh_uniform_bits_distinct_per_ue_and_seed():
+    c = np.zeros(64, dtype=np.uint64)
+    a = counter_rayleigh(counter_fading_seed(0), np.arange(64), c, 40.0)
+    b = counter_rayleigh(counter_fading_seed(1), np.arange(64), c, 40.0)
+    assert len(np.unique(a)) == 64           # no lane collisions
+    assert not np.array_equal(a, b)          # seed separation
+    np.testing.assert_array_equal(
+        a, counter_rayleigh(counter_fading_seed(0), np.arange(64), c, 40.0))
+
+
+def test_validate_rng_mode():
+    assert validate_rng_mode("legacy") == "legacy"
+    assert validate_rng_mode("counter") == "counter"
+    with pytest.raises(ValueError, match="unknown fading rng"):
+        validate_rng_mode("quantum")
+    with pytest.raises(ValueError, match="unknown fading rng"):
+        EdgeNetwork.drop(WirelessConfig(rng="quantum"), 4)
+
+
+# ---------------------------------------------------------------------------
+# determinism: value of (seed, ue, j) independent of call batching
+# ---------------------------------------------------------------------------
+
+def test_fading_lanes_independent_of_call_batching():
+    wl = WirelessConfig(rng="counter")
+    net_a = EdgeNetwork.drop(wl, 32, seed=3)
+    net_b = EdgeNetwork.drop(wl, 32, seed=3)
+    idx = np.array([4, 9, 17, 25, 9, 4, 4])   # repeats advance the counter
+    got = np.concatenate([net_a.fading_lanes(idx[:3]),
+                          net_a.fading_lanes(idx[3:])])
+    want = np.concatenate([net_b.fading_lanes(idx[i:i + 1])
+                           for i in range(len(idx))])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_multicell_counter_stream_matches_edge_network():
+    """The 1-cell mobile drop and the static drop share (seed, ue, j) —
+    the counter stream prices them identically."""
+    wl = WirelessConfig(rng="counter")
+    e = EdgeNetwork.drop(wl, 16, seed=5)
+    m = MultiCellNetwork.drop(wl, 16, n_cells=1, seed=5, speed_mps=0.0)
+    idx = np.arange(16)
+    np.testing.assert_array_equal(e.fading_lanes(idx), m.fading_lanes(idx))
+
+
+# ---------------------------------------------------------------------------
+# trajectories: counter goldens + legacy parity + feed parity
+# ---------------------------------------------------------------------------
+
+def test_counter_static_trajectory_golden():
+    """Counter-stream static run, pinned bitwise on host math (the
+    counter-mode analogue of the legacy golden in test_driver.py)."""
+    res = run_simulation(_cfg(rng="counter"), _MODEL, _clients(),
+                         algorithm="perfed", mode="semi", max_rounds=6,
+                         eval_every=2, seed=0)
+    assert [float(t).hex() for t in res.times] == [
+        "0x0.0p+0", "0x1.c54356e93685cp-1",
+        "0x1.b627e2dd22877p+0", "0x1.44e6583053d06p+1"]
+    assert float(res.total_time).hex() == "0x1.44e6583053d06p+1"
+    assert res.rounds.tolist() == [0, 2, 4, 6]
+    assert res.payloads_computed == 18
+
+
+def test_legacy_trajectory_unchanged_by_counter_machinery():
+    """``rng="legacy"`` must reproduce the pre-PR golden bitwise: the
+    counter state initialised at drop touches neither the main numpy
+    stream nor the pricing path."""
+    res = run_simulation(_cfg(), _MODEL, _clients(), algorithm="perfed",
+                         mode="semi", max_rounds=6, eval_every=2, seed=0)
+    assert float(res.total_time).hex() == "0x1.4066315c4298cp+1"
+
+
+def test_counter_degenerate_mobile_matches_static_bitwise():
+    """Counter pricing is a pure function of (seed, ue, draw index), so
+    the degenerate mobile run hits the static counter golden exactly."""
+    degen = dataclasses.replace(_cfg(rng="counter"),
+                                mobility=MobilityConfig(
+        enabled=True, speed_mps=0.0, n_cells=1, hierarchy=False))
+    res = run_simulation(degen, _MODEL, _clients(), algorithm="perfed",
+                         mode="semi", max_rounds=6, eval_every=2, seed=0)
+    assert float(res.total_time).hex() == "0x1.44e6583053d06p+1"
+
+
+def _feed_parity(cfg, make_clients=_clients, *, rounds=6, **kw):
+    """Batch-wise feed vs per-arrival sequential feed: identical host
+    trajectory (times are pure host math), identical protocol decisions
+    (Π), device math equal to float32 tolerance.  ``make_clients`` is a
+    factory — client objects carry private RNG state, so each run needs
+    a fresh set."""
+    seq = run_simulation(cfg, _MODEL, make_clients(), payload_mode="sequential",
+                         algorithm="perfed", mode="semi", max_rounds=rounds,
+                         eval_every=2, seed=0, **kw)
+    bat = run_simulation(cfg, _MODEL, make_clients(), payload_mode="batched",
+                         algorithm="perfed", mode="semi", max_rounds=rounds,
+                         eval_every=2, seed=0, **kw)
+    np.testing.assert_array_equal(seq.times, bat.times)
+    np.testing.assert_array_equal(seq.pi, bat.pi)
+    assert seq.total_time == bat.total_time
+    np.testing.assert_allclose(seq.losses, bat.losses, rtol=2e-5, atol=1e-6)
+    return seq, bat
+
+
+def test_batch_feed_matches_sequential_static_mixed_signatures():
+    """Tiny shards force mixed batch-shape signatures (triplet sizes
+    truncate to the shard), so the batched run exercises the multi-group
+    stacked feed (gather + inverse permute), segment-pending bookkeeping,
+    and the singleton ``_single`` ride."""
+    cfg = _cfg(n=6, a=2, s=2)
+
+    def tiny():
+        return partition_noniid(synthetic_mnist(n=60, seed=3), 6, l=3, seed=1)
+
+    sigs = {c.triplet_sizes(8, 8, 8) for c in tiny()}
+    assert len(sigs) > 1, f"expected mixed signatures, got {sigs}"
+    _feed_parity(cfg, tiny, rounds=5)
+
+
+def test_batch_feed_matches_sequential_hierarchy():
+    """Multi-cell hierarchy: drains interleave cells, so the batched run
+    exercises the per-cell segment split with the closing cell fed last
+    (visiting-staleness reads precede the round advance)."""
+    cfg = dataclasses.replace(
+        _cfg(n=8, a=4, s=6, first_order=True, eta_mode="distance"),
+        mobility=MobilityConfig(enabled=True, model="static", speed_mps=0.0,
+                                n_cells=2, hierarchy=True,
+                                cell_participants=2, cloud_sync_every=3))
+    seq, bat = _feed_parity(cfg, bandwidth_policy="equal")
+    assert seq.cloud_rounds == bat.cloud_rounds
+
+
+def test_batch_feed_matches_sequential_moving_hierarchy():
+    """Moving UEs: handovers + departed arrivals go through the batch
+    feed's transient visiting-version stamping."""
+    cfg = dataclasses.replace(
+        _cfg(n=8, a=4, s=4, first_order=True, eta_mode="distance",
+             rng="counter"),
+        mobility=MobilityConfig(enabled=True, model="random_waypoint",
+                                speed_mps=30.0, n_cells=2, hierarchy=True,
+                                cell_participants=2, cloud_sync_every=0,
+                                step_s=0.05))
+    seq, bat = _feed_parity(cfg, bandwidth_policy="equal")
+    assert seq.handovers == bat.handovers
+    assert seq.departed_arrivals == bat.departed_arrivals

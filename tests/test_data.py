@@ -8,7 +8,7 @@ except ImportError:                       # clean container (tier-1)
 
 from repro.data import (partition_noniid, synthetic_mnist,
                         synthetic_shakespeare)
-from repro.data.partition import sequence_clients
+from repro.data.partition import sample_triplet_many, sequence_clients
 
 
 @given(st.integers(2, 20), st.integers(1, 10), st.integers(0, 5))
@@ -45,6 +45,37 @@ def test_triplet_batches_independent():
     t = c.sample_triplet(8, 8, 8)
     assert set(t) == {"inner", "outer", "hessian"}
     assert not np.array_equal(t["inner"]["x"], t["outer"]["x"])
+
+
+def test_sample_triplet_many_bitwise_matches_loop():
+    """The stacked sampler must consume each client's private generator
+    exactly as the per-UE ``sample_triplet`` loop does — the batch-wise
+    driver feed relies on this to keep legacy trajectories bitwise."""
+    data = synthetic_mnist(n=60, seed=3)
+    a = partition_noniid(data, 6, 3, seed=1)
+    b = partition_noniid(data, 6, 3, seed=1)
+    groups = {}
+    for i, c in enumerate(a):
+        groups.setdefault(c.triplet_sizes(8, 8, 8), []).append(i)
+    assert len(groups) > 1                      # mixed shard sizes
+    for idx in groups.values():
+        stacked = sample_triplet_many([a[i] for i in idx], 8, 8, 8)
+        loop = [b[i].sample_triplet(8, 8, 8) for i in idx]
+        for part in ("inner", "outer", "hessian"):
+            for k in stacked[part]:
+                np.testing.assert_array_equal(
+                    stacked[part][k],
+                    np.stack([t[part][k] for t in loop]))
+
+
+def test_sample_triplet_many_rejects_mixed_sizes_and_empty():
+    data = synthetic_mnist(n=60, seed=3)
+    clients = partition_noniid(data, 6, 3, seed=1)
+    assert len({c.triplet_sizes(8, 8, 8) for c in clients}) > 1
+    with pytest.raises(ValueError, match="mixed triplet sizes"):
+        sample_triplet_many(clients, 8, 8, 8)
+    with pytest.raises(ValueError, match="at least one client"):
+        sample_triplet_many([], 8, 8, 8)
 
 
 def test_mnist_learnable_structure():

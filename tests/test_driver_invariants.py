@@ -56,6 +56,13 @@ class InstrumentedAdapter(MobileAdapter):
         self.stamped[int(ue)] = c
         return c
 
+    def dispatch_cells(self, ues) -> np.ndarray:
+        # the vectorized stamping path (fills / requeues / redistribute)
+        cells = super().dispatch_cells(ues)
+        for u, c in zip(np.asarray(ues, dtype=np.int64), cells):
+            self.stamped[int(u)] = int(c)
+        return cells
+
     def need(self, cell: int) -> int:
         v = super().need(cell)
         self.min_need = min(self.min_need, v)
@@ -77,6 +84,13 @@ class InstrumentedAdapter(MobileAdapter):
         for u in ues:
             self._record(cell, int(u))
         return super().on_round_batch(cell, ues, aggregate_fn)
+
+    def on_arrival_batch(self, cells, ues, payloads):
+        # nothing between a drain's arrivals moves cell membership, so
+        # recording all lanes up front matches the per-arrival semantics
+        for c, u in zip(cells, ues):
+            self._record(int(c), int(u))
+        return super().on_arrival_batch(cells, ues, payloads)
 
 
 def _budgets(mix: str, n_cells: int):
@@ -120,7 +134,7 @@ def _check_invariants(adapter: InstrumentedAdapter, res) -> None:
     # conservation: every fed arrival was either consumed by a closed round
     # (each closed round consumes exactly its cell's A) or is still pending
     consumed = sum(srv.a * len(srv.history_pi) for srv in hier.cells)
-    pending = sum(len(srv._pending) for srv in hier.cells)
+    pending = sum(len(srv._pending) + srv._seg_n for srv in hier.cells)
     assert adapter.n_arrivals == consumed + pending
     # drain targets never hit zero or below: the server can always absorb
     # one more upload before its round closes

@@ -188,3 +188,79 @@ def test_tree_flattener_roundtrip(rng):
     for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(params)):
         assert a.dtype == b.dtype and a.shape == b.shape
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# stacked payloads (batch-wise protocol feed)
+# ---------------------------------------------------------------------------
+
+def _group_stack(batches, lanes):
+    return jax.tree.map(lambda *xs: np.stack(xs), *[batches[i] for i in lanes])
+
+
+def test_compute_payloads_stacked_matches_per_lane():
+    """Interleaved shape groups: the stacked entry must return the rows in
+    arrival order (inverse permute across groups) and match the per-lane
+    path lane for lane."""
+    fl = _cfg().fl
+    clients = _clients()
+    params = _MODEL.init(jax.random.PRNGKey(1))
+    eng_a = SimulationEngine(_MODEL, fl, "perfed", payload_mode="batched")
+    eng_b = SimulationEngine(_MODEL, fl, "perfed", payload_mode="batched")
+    key = jax.random.PRNGKey(7)
+    big = [clients[i].sample_triplet(8, 8, 8) for i in range(3)]
+    small = [clients[0].sample_triplet(2, 2, 2) for _ in range(2)]
+    # arrival order interleaves the two signatures
+    batches = [big[0], small[0], big[1], small[1], big[2]]
+    seqs = [10, 11, 12, 13, 14]
+    alphas = [0.03 + 0.01 * i for i in range(5)]
+    groups = [([1, 3], _group_stack(batches, [1, 3])),
+              ([0, 2, 4], _group_stack(batches, [0, 2, 4]))]
+    stacked = eng_a.compute_payloads_stacked([params] * 5, groups, seqs,
+                                             alphas, key)
+    want = eng_b.compute_payloads([params] * 5, batches,
+                                  [jax.random.fold_in(key, s) for s in seqs],
+                                  alphas)
+    assert eng_a.dispatches == eng_b.dispatches == 2
+    assert eng_a.payloads_computed == 5
+    for lane in range(5):
+        row = jax.tree.map(lambda x, lane=lane: x[lane], stacked)
+        for rl, wl in zip(jax.tree.leaves(row), jax.tree.leaves(want[lane])):
+            np.testing.assert_allclose(np.asarray(rl), np.asarray(wl),
+                                       rtol=1e-6, atol=1e-7)
+
+
+def test_compute_payloads_stacked_singleton_rides_single_jit():
+    """A 1-lane group must ride the exact scalar ``_single`` jit bitwise —
+    no bucket padding, no vmap."""
+    fl = _cfg().fl
+    clients = _clients()
+    params = _MODEL.init(jax.random.PRNGKey(1))
+    eng = SimulationEngine(_MODEL, fl, "perfed", payload_mode="batched")
+    key = jax.random.PRNGKey(7)
+    batch = clients[0].sample_triplet(8, 8, 8)
+    stacked = eng.compute_payloads_stacked(
+        [params], [([0], _group_stack([batch], [0]))], [5], [0.03], key)
+    assert eng.dispatches == 1
+    want = eng._single(params, batch, jax.random.fold_in(key, 5), 0.03)
+    for sl, wl in zip(jax.tree.leaves(stacked), jax.tree.leaves(want)):
+        assert sl.shape[0] == 1
+        np.testing.assert_array_equal(np.asarray(sl[0]), np.asarray(wl))
+
+
+def test_singleton_group_rides_single_jit_in_per_lane_path():
+    """``compute_payloads``'s singleton shape group must also skip bucket
+    padding and match ``_single`` bitwise."""
+    fl = _cfg().fl
+    clients = _clients()
+    params = _MODEL.init(jax.random.PRNGKey(1))
+    eng = SimulationEngine(_MODEL, fl, "perfed", payload_mode="batched")
+    big = [clients[i].sample_triplet(8, 8, 8) for i in range(2)]
+    small = clients[0].sample_triplet(2, 2, 2)
+    rngs = [jax.random.PRNGKey(i) for i in range(3)]
+    out = eng.compute_payloads([params] * 3, big + [small], rngs,
+                               [0.03] * 3)
+    assert eng.dispatches == 2            # one vmap bucket + one _single
+    want = eng._single(params, small, rngs[2], 0.03)
+    for ol, wl in zip(jax.tree.leaves(out[2]), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(ol), np.asarray(wl))

@@ -106,3 +106,69 @@ def test_realised_eta_sums_to_one():
         srv.on_arrival(int(rng.integers(5)), _payload())
     eta = srv.realised_eta()
     assert abs(eta.sum() - 1.0) < 1e-9
+
+
+# ---------------------------------------------------------------------------
+# batch-wise segment feed (on_arrival_batch)
+# ---------------------------------------------------------------------------
+
+def _stacked(vals):
+    """Stacked payload tree: leading lane axis, arrival order."""
+    return {"w": np.asarray([[v] for v in vals], dtype=np.float32)}
+
+
+def test_batch_feed_matches_per_arrival():
+    a_srv = _mk(n=4, a=3, beta=0.1)
+    b_srv = _mk(n=4, a=3, beta=0.1)
+    for u, v in [(0, 2.0), (1, 4.0)]:
+        assert a_srv.on_arrival(u, _payload(v)) is None
+    ra = a_srv.on_arrival(2, _payload(6.0))
+    # same uploads as two segments: a non-closing drain, then the closer
+    assert b_srv.on_arrival_batch([0, 1], _stacked([2.0, 4.0])) is None
+    assert b_srv.arrivals_until_round() == 1
+    rb = b_srv.on_arrival_batch([2], _stacked([6.0]))
+    assert ra["round"] == rb["round"] == 1
+    assert ra["distribute"] == rb["distribute"]
+    np.testing.assert_allclose(np.asarray(rb["params"]["w"]),
+                               np.asarray(ra["params"]["w"]), rtol=1e-6)
+    np.testing.assert_array_equal(a_srv.pi_matrix(), b_srv.pi_matrix())
+    np.testing.assert_array_equal(a_srv.ue_version, b_srv.ue_version)
+    np.testing.assert_array_equal(np.stack(a_srv.history_staleness),
+                                  np.stack(b_srv.history_staleness))
+
+
+def test_batch_feed_taus_override_discounted_weights():
+    """λ<1: the explicit ``taus`` vector must weight exactly as the same
+    staleness read off ``ue_version`` would (the hierarchy snapshots τ
+    before reverting transient visiting stamps)."""
+    a_srv = _mk(n=4, a=2, beta=0.1)
+    b_srv = _mk(n=4, a=2, beta=0.1)
+    a_srv.cfg.staleness_discount = b_srv.cfg.staleness_discount = 0.5
+    a_srv.ue_version[1] = -2                 # τ(1) = 2 at round 0
+    ra = a_srv.on_arrival(0, _payload(2.0)) or a_srv.on_arrival(
+        1, _payload(4.0))
+    rb = b_srv.on_arrival_batch([0, 1], _stacked([2.0, 4.0]),
+                                taus=np.array([0, 2]))
+    np.testing.assert_allclose(np.asarray(rb["params"]["w"]),
+                               np.asarray(ra["params"]["w"]), rtol=1e-6)
+
+
+def test_batch_feed_overshoot_raises():
+    srv = _mk(n=4, a=2)
+    with pytest.raises(RuntimeError, match="overshoots"):
+        srv.on_arrival_batch([0, 1, 2], _stacked([1.0, 1.0, 1.0]))
+
+
+def test_mixed_feed_styles_raise():
+    srv = _mk(n=4, a=3)
+    srv.on_arrival(0, _payload())
+    with pytest.raises(RuntimeError, match="per-arrival uploads pending"):
+        srv.on_arrival_batch([1], _stacked([1.0]))
+    srv2 = _mk(n=4, a=3)
+    srv2.on_arrival_batch([0], _stacked([1.0]))
+    with pytest.raises(RuntimeError, match="segment uploads pending"):
+        srv2.on_arrival(1, _payload())
+    srv3 = _mk(n=4, a=2)
+    srv3.on_arrival_batch([0], _stacked([1.0]))
+    with pytest.raises(RuntimeError, match="pending uploads"):
+        srv3.on_round_batch([0, 1], lambda p, w: p)
