@@ -1,0 +1,118 @@
+"""Render (or validate) a simulator telemetry trace.
+
+Reads the per-round JSONL a traced run writes (``run_simulation(...,
+trace_dir=...)`` / ``cfg.obs.trace_dir``) and prints the run header, a
+per-phase host/device breakdown, counter totals, and a per-round table.
+
+    PYTHONPATH=src python scripts/trace_report.py runs/trace/metrics.jsonl
+    PYTHONPATH=src python scripts/trace_report.py --check <trace.jsonl>
+
+``--check`` validates the schema and the per-round invariants
+(``obs.recorder.validate_rows``) and exits non-zero on any problem — the
+CI traced-smoke step runs it against a fresh trace.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):          # run as a script, not -m
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
+
+from repro.obs.recorder import split_rows, validate_rows
+from repro.utils.metrics import read_metrics
+
+# per-round table cap for the default rendering (full table via --rounds 0)
+DEFAULT_ROUNDS_SHOWN = 30
+
+
+def _fmt_s(v: float) -> str:
+    return f"{v*1e3:9.2f}ms" if v < 1.0 else f"{v:9.3f}s "
+
+
+def render(rows, max_rounds: int = DEFAULT_ROUNDS_SHOWN) -> str:
+    meta, recs, summary = split_rows(rows)
+    out = []
+    if meta:
+        out.append("trace: " + ", ".join(
+            f"{k}={v}" for k, v in meta.items() if k != "schema"))
+    if summary:
+        wall = summary.get("wall_s", 0.0)
+        out.append(f"rounds={summary.get('rounds')} "
+                   f"arrivals={summary.get('arrivals')} "
+                   f"wall={wall:.3f}s device={summary.get('device_s', 0):.3f}s")
+        phases = summary.get("phase_s", {})
+        if phases:
+            out.append("")
+            out.append("phase breakdown (exclusive host seconds):")
+            tracked = sum(phases.values())
+            for k, v in sorted(phases.items(), key=lambda kv: -kv[1]):
+                pct = 100.0 * v / wall if wall > 0 else 0.0
+                out.append(f"  {k:<14s}{_fmt_s(v)}  {pct:5.1f}% of wall")
+            other = max(wall - tracked - summary.get("device_s", 0.0), 0.0)
+            out.append(f"  {'(untracked)':<14s}{_fmt_s(other)}")
+        dev = summary.get("device_phase_s", {})
+        if dev:
+            out.append("device seconds by phase:")
+            for k, v in sorted(dev.items(), key=lambda kv: -kv[1]):
+                out.append(f"  {k:<20s}{_fmt_s(v)}")
+        counts = summary.get("counts", {})
+        if counts:
+            out.append("counters:")
+            for k in sorted(counts):
+                out.append(f"  {k:<32s}{counts[k]:>10d}")
+        per_cell = summary.get("per_cell_a", {})
+        if len(per_cell) > 1:
+            out.append("arrivals per cell: " + ", ".join(
+                f"c{c}={a}" for c, a in sorted(per_cell.items(),
+                                               key=lambda kv: int(kv[0]))))
+    if recs:
+        out.append("")
+        out.append(f"{'round':>5s} {'cell':>4s} {'a':>4s} {'heap':>5s} "
+                   f"{'t_sim':>9s} {'wall_ms':>8s} {'dev_ms':>8s} "
+                   f"{'disp':>5s}")
+        shown = recs if max_rounds <= 0 else recs[:max_rounds]
+        for r in shown:
+            out.append(f"{r['round']:>5d} {r['cell']:>4d} {r['a']:>4d} "
+                       f"{r['heap_depth']:>5d} {r['t_sim']:>9.2f} "
+                       f"{r['wall_s']*1e3:>8.2f} {r['device_s']*1e3:>8.2f} "
+                       f"{r['dispatches']:>5d}")
+        if len(recs) > len(shown):
+            out.append(f"... {len(recs) - len(shown)} more rounds "
+                       f"(--rounds 0 for all)")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="path to a telemetry metrics.jsonl "
+                                  "(or the directory holding one)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate schema + invariants, no rendering")
+    ap.add_argument("--rounds", type=int, default=DEFAULT_ROUNDS_SHOWN,
+                    help="per-round rows to render (0 = all)")
+    args = ap.parse_args(argv)
+
+    path = args.trace
+    if os.path.isdir(path):
+        path = os.path.join(path, "metrics.jsonl")
+    rows = read_metrics(path)
+
+    if args.check:
+        errs = validate_rows(rows)
+        if errs:
+            for e in errs:
+                print(f"INVALID: {e}", file=sys.stderr)
+            return 1
+        _, recs, _ = split_rows(rows)
+        print(f"OK: {path} — {len(recs)} round records, schema valid")
+        return 0
+
+    print(render(rows, max_rounds=args.rounds))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

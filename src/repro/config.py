@@ -6,6 +6,7 @@ Every experiment is described by a tree of frozen dataclasses:
     ├── ``ModelConfig``     — architecture hyperparameters (family-dispatch)
     ├── ``FLConfig``        — PerFedS² / FL hyperparameters (A, S, n_ues, α, β, ...)
     ├── ``WirelessConfig``  — mobile-edge channel parameters (Table I of the paper)
+    ├── ``ObsConfig``       — telemetry / tracing / reporting (src/repro/obs)
     ├── ``TrainConfig``     — optimizer / batching / steps
     └── ``MeshConfig``      — device mesh + sharding knobs
 
@@ -262,6 +263,27 @@ class MobilityConfig:
 
 
 @dataclass(frozen=True)
+class ObsConfig:
+    """Observability (``src/repro/obs``): tracing, telemetry, reporting.
+
+    Everything here is read-only instrumentation — enabling it never
+    changes a trajectory (goldens are pinned with tracing fully on).
+    ``run_simulation``'s ``tracer``/``trace_dir``/``reporter`` kwargs
+    override these per call.
+    """
+    # progress reporting level: quiet | progress | debug.  The legacy
+    # ``verbose=True`` kwarg maps to "progress" (same output, same text)
+    report: str = "quiet"
+    trace: bool = False                  # collect phase spans + counters
+    trace_dir: str = ""                  # per-round JSONL (implies trace)
+    # block on every engine dispatch / protocol feed and attribute the
+    # time as device seconds (host = wall − device); synchronizes, so
+    # leave off when measuring end-to-end throughput
+    device_timing: bool = False
+    profile_dir: str = ""                # jax.profiler trace → TensorBoard
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     optimizer: str = "adam"              # server-side optimizer for at-scale path
     learning_rate: float = 3e-4
@@ -316,6 +338,7 @@ class ExperimentConfig:
     fl: FLConfig = field(default_factory=FLConfig)
     wireless: WirelessConfig = field(default_factory=WirelessConfig)
     mobility: MobilityConfig = field(default_factory=MobilityConfig)
+    obs: ObsConfig = field(default_factory=ObsConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
     mesh: MeshConfig = field(default_factory=MeshConfig)
 

@@ -20,6 +20,8 @@ from typing import NamedTuple, Optional, Sequence
 
 import numpy as np
 
+from repro.obs import trace as obs
+
 
 # ---------------------------------------------------------------------------
 # Lambert W (principal and -1 branches) via Halley iteration
@@ -209,7 +211,10 @@ def equal_finish_allocation(z_bits: Sequence[float], tcmp: Sequence[float],
 
     lo = float(tc.max()) * (1.0 + 1e-9) + 1e-12
     hi = max(lo * 2.0, 1e-6)
-    if t_hint is not None and np.isfinite(t_hint) and t_hint > lo:
+    warm = t_hint is not None and np.isfinite(t_hint) and t_hint > lo
+    obs.CURRENT.add("bandwidth.warm_starts" if warm
+                    else "bandwidth.cold_starts")
+    if warm:
         if need(float(t_hint)) > total_bw:
             lo = float(t_hint)           # T* above the hint: raise the floor
             hi = max(hi, lo * 2.0)
@@ -218,7 +223,9 @@ def equal_finish_allocation(z_bits: Sequence[float], tcmp: Sequence[float],
     while need(hi) > total_bw and hi < 1e12:
         hi *= 2.0
     met_tol = False
+    iters = 0
     for _ in range(max_iter):
+        iters += 1
         mid = 0.5 * (lo + hi)
         if need(mid) > total_bw:
             lo = mid
@@ -227,6 +234,7 @@ def equal_finish_allocation(z_bits: Sequence[float], tcmp: Sequence[float],
         if hi - lo < tol * max(hi, 1.0):
             met_tol = True
             break
+    obs.CURRENT.add("bandwidth.bisect_iters", iters)
     t_star = hi
     b = bandwidths_for_time(z, t_star, tc, q)
     # numerical guard: scale onto the simplex Σb = B — and *say so* when the

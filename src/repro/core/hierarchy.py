@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core.server import SemiSyncServer, ServerConfig
 from repro.kernels.stale_aggregate import masked_aggregate_tree
+from repro.obs import trace as obs
 
 # version sentinel: staleness = round − version stays hugely negative, so a
 # non-member UE never triggers this cell's forced-refresh rule
@@ -218,13 +219,19 @@ class HierarchicalServer:
     # ------------------------------------------------------------------
     def cloud_sync(self) -> None:
         """Merge cell models: weighted mean via ``masked_aggregate_tree``."""
+        with obs.CURRENT.span("cloud_sync"):
+            obs.CURRENT.add("hierarchy.cloud_syncs")
+            self._cloud_sync()
+
+    def _cloud_sync(self) -> None:
         if self.hcfg.cell_weighting == "arrivals" and \
                 self._arrivals_since_sync.sum() > 0:
             w = self._arrivals_since_sync.astype(np.float32)
         else:
             w = np.ones(self.hcfg.n_cells, np.float32)
-        merged = masked_aggregate_tree([srv.params for srv in self.cells],
-                                       jnp.asarray(w))
+        merged = obs.CURRENT.device_call(
+            "cloud_sync", masked_aggregate_tree,
+            [srv.params for srv in self.cells], jnp.asarray(w))
         ref = self.cells[0].params
         merged = jax.tree.map(
             lambda m, p: m.astype(jnp.asarray(p).dtype), merged, ref)

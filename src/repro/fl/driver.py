@@ -57,6 +57,9 @@ import numpy as np
 from repro.config import ExperimentConfig
 from repro.data.partition import ClientDataset, sample_triplet_many
 from repro.fl.engine import SimulationEngine, ensure_engine
+from repro.obs import trace as obs
+from repro.obs.recorder import SCHEMA, RoundRecorder
+from repro.utils.metrics import MetricsLogger
 from repro.wireless.channel import noise_w_per_hz, pathloss_pow
 from repro.wireless.timing import compute_times, model_bits, upload_times
 
@@ -84,6 +87,10 @@ class SimResult:
     handovers: int = 0           # nearest-BS re-associations during the run
     cloud_rounds: int = 0        # hierarchical cloud merges performed
     departed_arrivals: int = 0   # uploads that arrived after a handover
+    # end-of-run telemetry summary (None unless the run was traced):
+    # per-phase host seconds, device seconds, counters, per-cell arrivals,
+    # and the JSONL trace path when one was written — see obs/recorder.py
+    telemetry: Optional[Dict[str, Any]] = None
 
 
 class TopologyAdapter:
@@ -238,15 +245,36 @@ def make_cycle_duration_fn(adapter: TopologyAdapter, wl, z_bits: float,
         return h
 
     def cycle_durations(ues) -> np.ndarray:
-        adapter.pre_requeue(ues)
-        idx = np.asarray(ues, dtype=np.int64)
-        h = _fading_lanes(idx)
-        tcmp = compute_times(cycles, d_i[idx], net.cpu_freq[idx])
-        q = p * h * _pathloss(net.distances, idx) / n0   # UEChannel.q
-        tcom = upload_times(z_bits, adapter.bw[idx], q)
-        return tcmp + tcom
+        # one span per requeue (not per lane): disabled cost is a single
+        # no-op context enter/exit on the batched call
+        with obs.CURRENT.span("pricing"):
+            adapter.pre_requeue(ues)
+            idx = np.asarray(ues, dtype=np.int64)
+            h = _fading_lanes(idx)
+            tcmp = compute_times(cycles, d_i[idx], net.cpu_freq[idx])
+            q = p * h * _pathloss(net.distances, idx) / n0   # UEChannel.q
+            tcom = upload_times(z_bits, adapter.bw[idx], q)
+            return tcmp + tcom
 
     return cycle_durations
+
+
+def _protocol_call(fn, *args):
+    """Feed the protocol under the "protocol" phase span, with device
+    attribution when the tracer blocks (segment slicing, staleness
+    aggregation, cloud merges are device tree ops)."""
+    tr = obs.CURRENT
+    with tr.span("protocol"):
+        return tr.device_call("protocol", fn, *args)
+
+
+def _closing_server(adapter: TopologyAdapter, result: Dict[str, Any]):
+    """The ``SemiSyncServer`` whose round just closed (read-only: the
+    recorder reads its Π row / staleness snapshot)."""
+    proto = adapter.protocol()
+    if hasattr(proto, "cells") and "cell" in result:
+        return proto.cells[result["cell"]]
+    return proto
 
 
 def run_event_loop(cfg: ExperimentConfig, model,
@@ -258,7 +286,49 @@ def run_event_loop(cfg: ExperimentConfig, model,
                    seed: int = 0, name: Optional[str] = None,
                    verbose: bool = False,
                    payload_mode: Optional[str] = None,
-                   engine: Optional[SimulationEngine] = None) -> SimResult:
+                   engine: Optional[SimulationEngine] = None,
+                   tracer: Optional[obs.Tracer] = None,
+                   trace_dir: Optional[str] = None,
+                   profile_dir: Optional[str] = None,
+                   reporter: Optional[obs.Reporter] = None) -> SimResult:
+    """Run the event loop, optionally under the telemetry layer.
+
+    ``tracer``/``trace_dir``/``profile_dir``/``reporter`` override the
+    corresponding ``cfg.obs`` fields; a tracer (explicit or implied by
+    ``cfg.obs.trace`` / a trace dir) is installed as the process-wide
+    ``obs.trace.CURRENT`` for the duration of the run, a per-round JSONL
+    trace is written when a directory is given, and the end-of-run
+    summary lands on ``SimResult.telemetry``.  Tracing is read-only —
+    trajectories are bitwise identical with it on or off.
+    """
+    oc = cfg.obs
+    trace_dir = trace_dir or (oc.trace_dir or None)
+    profile_dir = profile_dir or (oc.profile_dir or None)
+    if tracer is None and (oc.trace or trace_dir or profile_dir):
+        tracer = obs.Tracer(device=oc.device_timing,
+                            profile=bool(profile_dir))
+    rep = reporter or obs.Reporter("progress" if verbose else oc.report)
+    with obs.use(tracer), obs.profile_trace(profile_dir):
+        return _event_loop(cfg, model, clients, adapter,
+                           algorithm=algorithm, mode=mode,
+                           max_rounds=max_rounds, eval_every=eval_every,
+                           eval_clients=eval_clients, seed=seed, name=name,
+                           payload_mode=payload_mode, engine=engine,
+                           tracer=tracer, trace_dir=trace_dir, rep=rep)
+
+
+def _event_loop(cfg: ExperimentConfig, model,
+                clients: List[ClientDataset],
+                adapter: TopologyAdapter, *,
+                algorithm: str, mode: str,
+                max_rounds: Optional[int],
+                eval_every: int, eval_clients: int,
+                seed: int, name: Optional[str],
+                payload_mode: Optional[str],
+                engine: Optional[SimulationEngine],
+                tracer: Optional[obs.Tracer],
+                trace_dir: Optional[str],
+                rep: obs.Reporter) -> SimResult:
     fl, wl = cfg.fl, cfg.wireless
     n = len(clients)
     max_rounds = max_rounds or fl.rounds
@@ -275,6 +345,17 @@ def run_event_loop(cfg: ExperimentConfig, model,
     # snapshot so SimResult reports THIS run's dispatch counts even when the
     # engine (and its lifetime counters) is shared across a sweep
     disp0, pay0 = engine.dispatches, engine.payloads_computed
+
+    recorder: Optional[RoundRecorder] = None
+    if tracer is not None:
+        logger = None
+        if trace_dir:
+            logger = MetricsLogger(trace_dir, meta={
+                "schema": SCHEMA, "name": name or f"{algorithm}-{mode}",
+                "algorithm": algorithm, "mode": mode, "seed": seed,
+                "n_ues": n, "payload_mode": engine.payload_mode,
+                "device_timing": tracer.device_timing})
+        recorder = RoundRecorder(tracer, engine=engine, logger=logger)
     # per-UE inner learning rates α_i (paper §II-B: "easily extended to the
     # general case when UEs have diverse learning rate α_i")
     if fl.alpha_spread > 0:
@@ -305,6 +386,10 @@ def run_event_loop(cfg: ExperimentConfig, model,
         # per-client keys derived exactly as the sequential loop did, then
         # the whole cohort evaluates as one vmapped dispatch per shape
         # group (engine.eval_many); singleton groups ride the eval_one jit
+        with obs.CURRENT.span("eval"):
+            return _evaluate(params, k)
+
+    def _evaluate(params, k: int) -> Tuple[float, float, float]:
         r = jax.random.fold_in(eval_key, k)
         subs, batches_list = [], []
         for ci in eval_idx:
@@ -363,40 +448,57 @@ def run_event_loop(cfg: ExperimentConfig, model,
         items = [it for it in items if it[0] not in redistributed]
         if not items:
             return
-        cells_r = adapter.dispatch_cells([u for u, _ in items])
-        durs_r = cycle_durations([u for u, _ in items])
-        version = adapter.rounds_done()
-        for (ue, t0), dur, dc in zip(items, durs_r, cells_r):
-            heapq.heappush(heap, (t0 + float(dur), seq, ue, version,
-                                  float(dur), int(epoch[ue]), int(dc)))
-            seq += 1
+        with obs.CURRENT.span("restart"):
+            obs.CURRENT.add("driver.restarted_ues", len(items))
+            cells_r = adapter.dispatch_cells([u for u, _ in items])
+            durs_r = cycle_durations([u for u, _ in items])
+            version = adapter.rounds_done()
+            for (ue, t0), dur, dc in zip(items, durs_r, cells_r):
+                heapq.heappush(heap, (t0 + float(dur), seq, ue, version,
+                                      float(dur), int(epoch[ue]), int(dc)))
+                seq += 1
 
     redistributed: set = set()          # UEs given a new cycle this drain
 
     def handle(result) -> None:
         nonlocal seq
+        if recorder is not None:
+            # read-only peek at the closing server: its just-appended Π row
+            # is the arrived-UE set, its staleness vector the τ snapshot
+            srv = _closing_server(adapter, result)
+            rec = recorder.on_round(
+                result=result,
+                ues=np.nonzero(srv.history_pi[-1])[0],
+                heap_depth=len(heap),
+                extras=adapter.result_extras(),
+                t_sim=t_now,
+                staleness=srv.history_staleness[-1])
+            rep.debug(f"[trace] round {rec['round']} cell={rec['cell']} "
+                      f"a={rec['a']} heap={rec['heap_depth']} "
+                      f"wall={rec['wall_s']*1e3:.1f}ms")
         dist = result["distribute"]
         if dist:
-            redistributed.update(int(i) for i in dist)
-            for i in dist:
-                held_params[i] = result["params"]
-            dist_arr = np.asarray(dist, dtype=np.int64)
-            epoch[dist_arr] += 1        # cancels any in-flight computation
-            cells_d = adapter.dispatch_cells(dist_arr)
-            for i, dur_i, dc in zip(dist, cycle_durations(dist), cells_d):
-                heapq.heappush(heap, (t_now + float(dur_i), seq, int(i),
-                                      result["round"], float(dur_i),
-                                      int(epoch[i]), int(dc)))
-                seq += 1
+            with obs.CURRENT.span("redistribute"):
+                redistributed.update(int(i) for i in dist)
+                for i in dist:
+                    held_params[i] = result["params"]
+                dist_arr = np.asarray(dist, dtype=np.int64)
+                epoch[dist_arr] += 1    # cancels any in-flight computation
+                cells_d = adapter.dispatch_cells(dist_arr)
+                for i, dur_i, dc in zip(dist, cycle_durations(dist),
+                                        cells_d):
+                    heapq.heappush(heap, (t_now + float(dur_i), seq, int(i),
+                                          result["round"], float(dur_i),
+                                          int(epoch[i]), int(dc)))
+                    seq += 1
         k = result["round"]
         if do_eval and (k % eval_every == 0 or k == max_rounds):
             p, g, a = evaluate(result["params"], k)
             times.append(t_now); plosses.append(p); glosses.append(g)
             accs.append(a); rounds_at.append(k)
-            if verbose:
-                cell = f" cell={result['cell']}" if "cell" in result else ""
-                print(f"[{name or algorithm}-{mode}]{cell} round {k:4d} "
-                      f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
+            cell = f" cell={result['cell']}" if "cell" in result else ""
+            rep.progress(f"[{name or algorithm}-{mode}]{cell} round {k:4d} "
+                         f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
 
     while adapter.rounds_done() < max_rounds and heap:
         # ---- drain arrivals until the first cell would close its round ----
@@ -411,18 +513,29 @@ def run_event_loop(cfg: ExperimentConfig, model,
         batch: List[Tuple[float, int, int, float, int]] = []
         closing: Optional[int] = None
         redistributed.clear()
-        while heap:
-            t, sq, ue, _version, dur, ev_epoch, cell = heapq.heappop(heap)
-            if ev_epoch != epoch[ue]:
-                continue                # abandoned (stale-refresh) cycle
-            adapter.advance_to(t)
-            # route by the *stamped* dispatch cell: an upload in flight
-            # across a handover still closes the round it was computed for
-            batch.append((t, ue, sq, dur, cell))
-            drained[cell] += 1
-            if drained[cell] >= adapter.need(cell):
-                closing = cell
-                break
+        stale_pops = 0
+        # NOTE: the pop loop itself carries no per-pop tracing calls — the
+        # drain is the hot path and must stay free when tracing is off;
+        # mobility/handover time is attributed inside the (rare) tick
+        # branch of ``multicell.advance_to``, not here
+        with obs.CURRENT.span("drain"):
+            while heap:
+                t, sq, ue, _version, dur, ev_epoch, cell = \
+                    heapq.heappop(heap)
+                if ev_epoch != epoch[ue]:
+                    stale_pops += 1
+                    continue            # abandoned (stale-refresh) cycle
+                adapter.advance_to(t)
+                # route by the *stamped* dispatch cell: an upload in flight
+                # across a handover still closes the round it was computed
+                # for
+                batch.append((t, ue, sq, dur, cell))
+                drained[cell] += 1
+                if drained[cell] >= adapter.need(cell):
+                    closing = cell
+                    break
+        if stale_pops:
+            obs.CURRENT.add("driver.stale_pops", stale_pops)
         if not batch:
             break
 
@@ -441,9 +554,11 @@ def run_event_loop(cfg: ExperimentConfig, model,
             # fused fast path: the whole round of the closing cell — per-
             # arrival RNG, vmapped payloads, Eq. (8) stale aggregation —
             # fuses into one device dispatch per model-version group
-            triplets = [clients[ue].sample_triplet(
-                fl.inner_batch, fl.outer_batch, fl.hessian_batch)
-                for ue in ues_arr]
+            obs.CURRENT.add("driver.rounds_fused")
+            with obs.CURRENT.span("sampling"):
+                triplets = [clients[ue].sample_triplet(
+                    fl.inner_batch, fl.outer_batch, fl.hessian_batch)
+                    for ue in ues_arr]
             t_now = batch[-1][0]
             busy_time[ues_arr] += [b[3] for b in batch]   # completed cycles
 
@@ -453,27 +568,32 @@ def run_event_loop(cfg: ExperimentConfig, model,
                     [sq for _, _, sq, _, _ in batch],
                     a_i, weights, beta=fl.beta, base_key=payload_key)
 
-            handle(adapter.on_round_batch(
-                closing, [int(ue) for ue in ues_arr], aggregate))
+            handle(_protocol_call(adapter.on_round_batch,
+                                  closing, [int(ue) for ue in ues_arr],
+                                  aggregate))
             moved = np.nonzero(
                 adapter.dispatch_cells(ues_arr) != cells_arr)[0]
             restart_departed([(int(ues_arr[i]), batch[i][0])
                               for i in moved])
         elif engine.payload_mode == "sequential":
-            triplets = [clients[ue].sample_triplet(
-                fl.inner_batch, fl.outer_batch, fl.hessian_batch)
-                for ue in ues_arr]
-            payloads = engine.compute_payloads(
-                held, triplets,
-                [jax.random.fold_in(payload_key, sq)
-                 for _, _, sq, _, _ in batch],
-                a_i)
+            obs.CURRENT.add("driver.rounds_sequential")
+            with obs.CURRENT.span("sampling"):
+                triplets = [clients[ue].sample_triplet(
+                    fl.inner_batch, fl.outer_batch, fl.hessian_batch)
+                    for ue in ues_arr]
+            with obs.CURRENT.span("payload"):
+                payloads = engine.compute_payloads(
+                    held, triplets,
+                    [jax.random.fold_in(payload_key, sq)
+                     for _, _, sq, _, _ in batch],
+                    a_i)
             # ---- feed the protocol in arrival order ------------------------
             restarts: List[Tuple[int, float]] = []
             for (t, ue, _sq, dur, cell), payload in zip(batch, payloads):
                 t_now = t
                 busy_time[ue] += dur    # only completed cycles count as busy
-                result = adapter.on_arrival(cell, ue, payload)
+                result = _protocol_call(adapter.on_arrival, cell, ue,
+                                        payload)
                 if result is not None:
                     handle(result)
                 if adapter.dispatch_cell(ue) != cell:
@@ -529,16 +649,20 @@ def run_event_loop(cfg: ExperimentConfig, model,
                 for lane, s in enumerate(sig_of):
                     sig_groups.setdefault(s, []).append(lane)
                 lane_groups = list(sig_groups.values())
-            groups = [(lanes, sample_triplet_many(
-                           [clients[int(ues_arr[i])] for i in lanes],
-                           fl.inner_batch, fl.outer_batch, fl.hessian_batch))
-                      for lanes in lane_groups]
-            payloads_stacked = engine.compute_payloads_stacked(
-                held, groups, [sq for _, _, sq, _, _ in batch], a_i,
-                payload_key)
+            obs.CURRENT.add("driver.rounds_batchwise")
+            with obs.CURRENT.span("sampling"):
+                groups = [(lanes, sample_triplet_many(
+                               [clients[int(ues_arr[i])] for i in lanes],
+                               fl.inner_batch, fl.outer_batch,
+                               fl.hessian_batch))
+                          for lanes in lane_groups]
+            with obs.CURRENT.span("payload"):
+                payloads_stacked = engine.compute_payloads_stacked(
+                    held, groups, [sq for _, _, sq, _, _ in batch], a_i,
+                    payload_key)
             busy_time[ues_arr] += [b[3] for b in batch]   # completed cycles
-            result = adapter.on_arrival_batch(cells_arr, ues_arr,
-                                              payloads_stacked)
+            result = _protocol_call(adapter.on_arrival_batch, cells_arr,
+                                    ues_arr, payloads_stacked)
             if result is not None:
                 handle(result)
             moved = np.nonzero(
@@ -555,8 +679,15 @@ def run_event_loop(cfg: ExperimentConfig, model,
     proto = adapter.protocol()
     jax.block_until_ready(jax.tree.leaves(proto.params))
 
+    telemetry = None
+    if recorder is not None:
+        telemetry = recorder.finalize(extras={
+            k: v for k, v in adapter.result_extras().items()
+            if isinstance(v, (int, np.integer))})
+
     wait_frac = float(1.0 - busy_time.sum() / max(n * t_now, 1e-9))
     return SimResult(
+        telemetry=telemetry,
         name=name or f"{algorithm}-{mode}",
         times=np.array(times), losses=np.array(plosses),
         global_losses=np.array(glosses), accs=np.array(accs),

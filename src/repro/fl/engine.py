@@ -40,6 +40,7 @@ import numpy as np
 from repro.config import FLConfig
 from repro.fl.client import make_payload_fn, personalized_eval
 from repro.kernels.stale_aggregate import stale_aggregate_tree
+from repro.obs import trace as obs
 from repro.utils.tree import TreeFlattener
 
 __all__ = ["SimulationEngine", "bucket_size", "ensure_engine"]
@@ -157,7 +158,9 @@ class SimulationEngine:
         if self._eval_fn is None:
             self._eval_fn = jax.jit(self._eval_raw())
         self.eval_dispatches += 1
-        return self._eval_fn(params, batches, rng)
+        obs.CURRENT.add("engine.dispatch.eval_one")
+        return obs.CURRENT.device_call("engine.eval", self._eval_fn,
+                                       params, batches, rng)
 
     def eval_many(self, params, batches_list: Sequence[Any],
                   rngs: Sequence[jax.Array]
@@ -192,7 +195,9 @@ class SimulationEngine:
                     jax.vmap(self._eval_raw(), in_axes=(None, 0, 0)))
             batches_b = _stack_trees([batches_list[i] for i in idx])
             rngs_b = jnp.stack([rngs[i] for i in idx])
-            p, g, a = self._eval_vfn(params, batches_b, rngs_b)
+            obs.CURRENT.add("engine.dispatch.eval_vmap")
+            p, g, a = obs.CURRENT.device_call(
+                "engine.eval", self._eval_vfn, params, batches_b, rngs_b)
             self.eval_dispatches += 1
             pl[idx] = np.asarray(p)
             gl[idx] = np.asarray(g)
@@ -217,11 +222,14 @@ class SimulationEngine:
         if m == 0:
             return []
         if self.payload_mode == "sequential":
-            out = [self._single(p, b, r, float(a))
+            tr = obs.CURRENT
+            out = [tr.device_call("engine.payload", self._single,
+                                  p, b, r, float(a))
                    for p, b, r, a in zip(params_list, batches_list, rngs,
                                          alphas)]
             self.dispatches += m
             self.payloads_computed += m
+            tr.add("engine.dispatch.sequential", m)
             return out
 
         # group by batch-shape signature (stragglers with short shards get
@@ -237,8 +245,10 @@ class SimulationEngine:
                 # eval_many does) — no bucket padding, no stack, no
                 # per-lane extraction
                 i = idx[0]
-                results[i] = self._single(params_list[i], batches_list[i],
-                                          rngs[i], float(alphas[i]))
+                obs.CURRENT.add("engine.dispatch.single")
+                results[i] = obs.CURRENT.device_call(
+                    "engine.payload", self._single, params_list[i],
+                    batches_list[i], rngs[i], float(alphas[i]))
                 self.dispatches += 1
                 self.payloads_computed += 1
                 continue
@@ -258,7 +268,9 @@ class SimulationEngine:
         rngs_b = jnp.stack([rngs[i] for i in pad])
         alphas_b = jnp.asarray([float(alphas[i]) for i in pad],
                                jnp.float32)
-        out = self._batched(params_b, batches_b, rngs_b, alphas_b)
+        obs.CURRENT.add("engine.dispatch.bucket")
+        out = obs.CURRENT.device_call("engine.payload", self._batched,
+                                      params_b, batches_b, rngs_b, alphas_b)
         self.dispatches += 1
         self.payloads_computed += k
         for lane, i in enumerate(idx):
@@ -348,9 +360,11 @@ class SimulationEngine:
         if k == 1:
             i = chunk[0]
             b = jax.tree.map(lambda x: x[rows[0]], batches)
-            out = self._single(params_list[i], b,
-                               jax.random.fold_in(base_key, int(seqs[i])),
-                               float(alphas[i]))
+            obs.CURRENT.add("engine.dispatch.single")
+            out = obs.CURRENT.device_call(
+                "engine.payload", self._single, params_list[i], b,
+                jax.random.fold_in(base_key, int(seqs[i])),
+                float(alphas[i]))
             self.dispatches += 1
             self.payloads_computed += 1
             return jax.tree.map(lambda x: x[None], out)
@@ -381,14 +395,18 @@ class SimulationEngine:
         alphas_b = jnp.asarray([float(alphas[i]) for i in pad],
                                jnp.float32)
         if len(uniq) == 1:
-            out = self._get_batched_keyed_shared()(
+            obs.CURRENT.add("engine.dispatch.stacked_shared")
+            out = obs.CURRENT.device_call(
+                "engine.payload", self._get_batched_keyed_shared(),
                 uniq[0], batches_b, seqs_b, alphas_b, base_key)
         else:
             vj = jnp.asarray(vidx, jnp.int32)
             params_b = jax.tree.map(
                 lambda *xs: jnp.stack(xs)[vj], *uniq)
-            out = self._get_batched_keyed()(params_b, batches_b, seqs_b,
-                                            alphas_b, base_key)
+            obs.CURRENT.add("engine.dispatch.stacked_keyed")
+            out = obs.CURRENT.device_call(
+                "engine.payload", self._get_batched_keyed(),
+                params_b, batches_b, seqs_b, alphas_b, base_key)
         self.dispatches += 1
         self.payloads_computed += k
         if bucket == k:
@@ -492,12 +510,16 @@ class SimulationEngine:
                                    jnp.float32)
             w = np.zeros(bucket, np.float32)
             w[:len(group_lanes)] = [float(weights[i]) for i in group_lanes]
-            partials.append(gfn(gparams[g], batches, seqs_b, alphas_b,
-                                jnp.asarray(w), base_key))
+            obs.CURRENT.add("engine.dispatch.group")
+            partials.append(obs.CURRENT.device_call(
+                "engine.round", gfn, gparams[g], batches, seqs_b,
+                alphas_b, jnp.asarray(w), base_key))
             self.dispatches += 1
         a_tot = max(float(np.asarray(weights, np.float32).sum()), 1.0)
         self.dispatches += 1                       # the combine call below
-        return self._get_combine_fn()(
+        obs.CURRENT.add("engine.dispatch.combine")
+        return obs.CURRENT.device_call(
+            "engine.round", self._get_combine_fn(),
             server_params, jnp.float32(beta / a_tot), *partials)
 
     def round_update(self, server_params, params_list: Sequence[Any],
@@ -546,7 +568,9 @@ class SimulationEngine:
                                jnp.float32)
         w = np.zeros(bucket, np.float32)
         w[:m] = np.asarray(weights, np.float32)
-        new_params, new_flat = self._get_round_fn(flattener)(
+        obs.CURRENT.add("engine.dispatch.round")
+        new_params, new_flat = obs.CURRENT.device_call(
+            "engine.round", self._get_round_fn(flattener),
             server_params, versions, batches, seqs_b, alphas_b,
             jnp.asarray(w), float(beta), base_key)
         self.dispatches += 1

@@ -54,6 +54,7 @@ from repro.core.server import SemiSyncServer, ServerConfig
 from repro.data.partition import ClientDataset
 from repro.fl.driver import SimResult, TopologyAdapter, run_event_loop
 from repro.fl.engine import SimulationEngine
+from repro.obs import trace as obs
 from repro.mobility.multicell import MultiCellNetwork
 from repro.wireless.channel import noise_w_per_hz, pathloss_pow
 from repro.wireless.timing import compute_times
@@ -245,12 +246,14 @@ class MobileAdapter(TopologyAdapter):
         # python loop over every requeued lane
         if not self._dirty_cells:
             return
-        touched = np.unique(self.net.assoc[np.asarray(ues, dtype=np.int64)])
-        for c in touched:
-            c = int(c)
-            if c in self._dirty_cells:
-                self._realloc(c)
-                self._dirty_cells.discard(c)
+        with obs.CURRENT.span("bandwidth"):
+            touched = np.unique(
+                self.net.assoc[np.asarray(ues, dtype=np.int64)])
+            for c in touched:
+                c = int(c)
+                if c in self._dirty_cells:
+                    self._realloc(c)
+                    self._dirty_cells.discard(c)
 
     def result_extras(self):
         return {
@@ -272,8 +275,10 @@ def run_mobile_simulation(cfg: ExperimentConfig, model,
                           seed: int = 0, name: Optional[str] = None,
                           verbose: bool = False,
                           payload_mode: Optional[str] = None,
-                          engine: Optional[SimulationEngine] = None
-                          ) -> SimResult:
+                          engine: Optional[SimulationEngine] = None,
+                          **obs_kw) -> SimResult:
+    """``obs_kw`` forwards the telemetry knobs (``tracer`` / ``trace_dir``
+    / ``profile_dir`` / ``reporter``) to ``run_event_loop``."""
     adapter = MobileAdapter(cfg, len(clients), seed=seed,
                             bandwidth_policy=bandwidth_policy, mode=mode)
     return run_event_loop(cfg, model, clients, adapter,
@@ -281,4 +286,4 @@ def run_mobile_simulation(cfg: ExperimentConfig, model,
                           max_rounds=max_rounds, eval_every=eval_every,
                           eval_clients=eval_clients, seed=seed, name=name,
                           verbose=verbose, payload_mode=payload_mode,
-                          engine=engine)
+                          engine=engine, **obs_kw)

@@ -96,7 +96,10 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
                    seed: int = 0, name: Optional[str] = None,
                    verbose: bool = False,
                    payload_mode: Optional[str] = None,  # default: batched
-                   engine: Optional[SimulationEngine] = None) -> SimResult:
+                   engine: Optional[SimulationEngine] = None,
+                   **obs_kw) -> SimResult:
+    """``obs_kw`` forwards the telemetry knobs (``tracer`` / ``trace_dir``
+    / ``profile_dir`` / ``reporter``) to ``run_event_loop``."""
     if cfg.mobility.enabled:
         # mobile multi-cell path (time-varying channels, handovers,
         # optional cell→cloud hierarchy) — fl/mobile.py; the static path
@@ -107,7 +110,7 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
             bandwidth_policy=bandwidth_policy, max_rounds=max_rounds,
             eval_every=eval_every, eval_clients=eval_clients, seed=seed,
             name=name, verbose=verbose, payload_mode=payload_mode,
-            engine=engine)
+            engine=engine, **obs_kw)
     adapter = StaticAdapter(cfg, len(clients), seed=seed,
                             bandwidth_policy=bandwidth_policy, mode=mode)
     return run_event_loop(cfg, model, clients, adapter,
@@ -115,4 +118,4 @@ def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],
                           max_rounds=max_rounds, eval_every=eval_every,
                           eval_clients=eval_clients, seed=seed, name=name,
                           verbose=verbose, payload_mode=payload_mode,
-                          engine=engine)
+                          engine=engine, **obs_kw)

@@ -62,6 +62,7 @@ import numpy as np
 from repro.config import WirelessConfig
 from repro.core.bandwidth import UEChannel
 from repro.mobility.models import Area, MobilityModel, get_mobility
+from repro.obs import trace as obs
 from repro.wireless.channel import (CounterFadingMixin, make_channel,
                                     mean_rates_for, validate_rng_mode)
 
@@ -281,15 +282,23 @@ class MultiCellNetwork(CounterFadingMixin):
         target = int(math.floor(t / self.step_s + 1e-9))
         if target <= self._ticks:
             return []
-        self.positions, self._mob_state = self.mobility.step_many(
-            self.positions, self._mob_state, target - self._ticks,
-            self.step_s, self.area, self.mob_rng)
+        # tracing lives only in this (rare) tick branch — the per-heap-pop
+        # no-new-tick calls above stay free of instrumentation
+        tr = obs.CURRENT
+        tr.add("mobility.ticks", target - self._ticks)
+        with tr.span("mobility"):
+            self.positions, self._mob_state = self.mobility.step_many(
+                self.positions, self._mob_state, target - self._ticks,
+                self.step_s, self.area, self.mob_rng)
         self._ticks = target
-        new_assoc = self._reassociate()
+        with tr.span("reassociate"):
+            new_assoc = self._reassociate()
         moved = np.nonzero(new_assoc != self.assoc)[0]
         events = [(int(u), int(self.assoc[u]), int(new_assoc[u]))
                   for u in moved]
         self.handovers += len(events)
+        if events:
+            tr.add("mobility.handovers", len(events))
         self.assoc = new_assoc
         return events
 
@@ -325,6 +334,7 @@ class MultiCellNetwork(CounterFadingMixin):
             disp_sq = ((pos - self._anchor) ** 2).sum(-1)
             cand = np.nonzero(disp_sq >= self._margin * self._margin)[0]
             if len(cand):
+                obs.CURRENT.add("mobility.rescored", len(cand))
                 d2 = ((pos[cand, None, :] - bs[None, :, :]) ** 2).sum(-1)
                 new_assoc = self.assoc.copy()
                 new_assoc[cand] = d2.argmin(axis=1).astype(np.int64)
@@ -349,8 +359,10 @@ class MultiCellNetwork(CounterFadingMixin):
         if self._la_converged:
             disp_sq = ((pos - self._anchor) ** 2).sum(-1)
             if not np.any(disp_sq >= self._margin * self._margin):
+                obs.CURRENT.add("mobility.load_aware_skips")
                 self._dist = self._serving_dist(self.assoc)
                 return self.assoc
+        obs.CURRENT.add("mobility.load_aware_recomputes")
         info: dict = {}
         new_assoc, self._dist = _associate_load_aware(
             pos, self.bs_xy, self.cell_bw, self.load_penalty_m,

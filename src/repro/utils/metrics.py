@@ -46,10 +46,23 @@ class MetricsLogger:
         self.close()
 
 
+# non-0-d arrays at or under this many elements serialise as (nested)
+# lists; larger ones as a shape/dtype stub — a [16k]-UE vector logged by
+# accident must not explode the JSONL
+ARRAY_ELEMS_CAP = 64
+
+
 def _plain(v: Any) -> Any:
     """Coerce jax/numpy scalars and containers to JSON-safe python."""
     if hasattr(v, "item") and getattr(v, "ndim", 1) == 0:
         return v.item()
+    if hasattr(v, "ndim") and hasattr(v, "tolist"):
+        # non-0-d ndarray/jax array: used to fall through un-coerced and
+        # crash json.dumps — coerce small ones to lists, summarize big
+        if int(np_size(v)) <= ARRAY_ELEMS_CAP:
+            return _plain(v.tolist())
+        return {"shape": [int(s) for s in v.shape],
+                "dtype": str(v.dtype), "size": int(np_size(v))}
     if isinstance(v, dict):
         return {k: _plain(x) for k, x in v.items()}
     if isinstance(v, (list, tuple)):
@@ -57,6 +70,15 @@ def _plain(v: Any) -> Any:
     if isinstance(v, float) and v != v:          # NaN → null
         return None
     return v
+
+
+def np_size(v: Any) -> int:
+    size = getattr(v, "size", None)
+    if size is None:                             # duck-typed array
+        size = 1
+        for s in v.shape:
+            size *= int(s)
+    return int(size)
 
 
 def read_metrics(path: str) -> List[Dict[str, Any]]:

@@ -1,8 +1,9 @@
-"""Metrics logger round-trips."""
+"""Metrics logger round-trips + array coercion in ``_plain``."""
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils.metrics import MetricsLogger, read_metrics
+from repro.utils.metrics import (ARRAY_ELEMS_CAP, MetricsLogger, _plain,
+                                 read_metrics)
 
 
 def test_jsonl_roundtrip(tmp_path):
@@ -24,3 +25,31 @@ def test_append_mode(tmp_path):
     MetricsLogger(str(tmp_path)).log(step=1, x=2)
     rows = read_metrics(str(tmp_path / "metrics.jsonl"))
     assert [r["x"] for r in rows] == [1, 2]
+
+
+def test_plain_small_arrays_become_lists():
+    # non-0-d ndarrays used to fall through _plain un-coerced and crash
+    # json.dumps at write time
+    assert _plain(np.array([1, 2, 3])) == [1, 2, 3]
+    assert _plain(jnp.arange(3, dtype=jnp.int32)) == [0, 1, 2]
+    got = _plain(np.array([[1.5, float("nan")], [0.0, 2.0]]))
+    assert got == [[1.5, None], [0.0, 2.0]]      # NaN → null, recursively
+    assert _plain({"v": np.arange(2)}) == {"v": [0, 1]}
+
+
+def test_plain_large_arrays_summarize_not_explode():
+    big = np.zeros((4, ARRAY_ELEMS_CAP), dtype=np.float32)
+    got = _plain(big)
+    assert got == {"shape": [4, ARRAY_ELEMS_CAP], "dtype": "float32",
+                   "size": 4 * ARRAY_ELEMS_CAP}
+    # cap boundary: exactly ARRAY_ELEMS_CAP elements still inlines
+    assert _plain(np.zeros(ARRAY_ELEMS_CAP)) == [0.0] * ARRAY_ELEMS_CAP
+
+
+def test_logger_accepts_ndarray_values(tmp_path):
+    with MetricsLogger(str(tmp_path)) as log:
+        log.log(step=0, hist=np.array([3, 1, 0]),
+                big=np.zeros(ARRAY_ELEMS_CAP + 1))
+    rows = read_metrics(str(tmp_path / "metrics.jsonl"))
+    assert rows[0]["hist"] == [3, 1, 0]
+    assert rows[0]["big"]["size"] == ARRAY_ELEMS_CAP + 1
