@@ -96,7 +96,7 @@ def _point(cfg, model, data, *, policy: str, mix: str, speed: float,
         cell_participants=cell_a, cell_bandwidth_hz=budgets,
         association=association)
     run_cfg = dataclasses.replace(cfg, mobility=mcfg)
-    clients = partition_noniid(data, n_ues, l=4, seed=0)  # fresh RNG per run
+    clients = partition_noniid(data, n_ues, n_labels=4, seed=0)  # fresh RNG per run
     t0 = time.perf_counter()
     res = run_simulation(run_cfg, model, clients, algorithm="perfed",
                          mode="semi", bandwidth_policy=policy,

@@ -25,7 +25,8 @@ def timed(fn: Callable, *args, repeats: int = 3, **kw):
     return out, us
 
 
-def standard_fl_setup(n_ues: int = 10, l: int = 4, a: int = 3, s: int = 3,
+def standard_fl_setup(n_ues: int = 10, n_labels: int = 4, a: int = 3,
+                      s: int = 3,
                       seed: int = 0, dataset: str = "mnist",
                       conflict: bool = False):
     """``conflict=True`` uses per-client label permutations — the regime
@@ -63,7 +64,7 @@ def standard_fl_setup(n_ues: int = 10, l: int = 4, a: int = 3, s: int = 3,
     else:
         model_cfg = get_config("mnist_dnn")
         clients = partition_noniid(synthetic_mnist(n=2500, seed=seed),
-                                   n_ues, l=l, seed=seed)
+                                   n_ues, n_labels=n_labels, seed=seed)
         alpha, beta = 0.03, 0.07
     cfg = ExperimentConfig(
         model=model_cfg,

@@ -44,7 +44,8 @@ def _setup(n_ues: int, seed: int = 0):
     # enough samples that every client shard exceeds the batch sizes —
     # keeps the whole sweep on the homogeneous-shape fused path
     data = synthetic_mnist(n=max(2500, 40 * n_ues), seed=seed)
-    make_clients = lambda: partition_noniid(data, n_ues, l=4, seed=seed)
+    def make_clients():
+        return partition_noniid(data, n_ues, n_labels=4, seed=seed)
     return cfg, model, make_clients
 
 

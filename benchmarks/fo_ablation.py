@@ -16,7 +16,7 @@ def run() -> None:
     from repro.fl.simulation import run_simulation
 
     for first_order in (False, True):
-        cfg, model, clients = standard_fl_setup(n_ues=10, a=3, l=2)
+        cfg, model, clients = standard_fl_setup(n_ues=10, a=3, n_labels=2)
         cfg = dataclasses.replace(
             cfg, fl=dataclasses.replace(cfg.fl, first_order=first_order))
         res = run_simulation(cfg, model, clients, algorithm="perfed",

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, timed
 
@@ -22,21 +21,21 @@ def run() -> None:
     rng = jax.random.PRNGKey(0)
 
     # flash attention
-    b, hq, hkv, l, d = 2, 8, 2, 256, 64
+    b, hq, hkv, sl, d = 2, 8, 2, 256, 64
     ks = jax.random.split(rng, 3)
-    q = jax.random.normal(ks[0], (b, hq, l, d), jnp.float32)
-    k = jax.random.normal(ks[1], (b, hkv, l, d), jnp.float32)
-    v = jax.random.normal(ks[2], (b, hkv, l, d), jnp.float32)
+    q = jax.random.normal(ks[0], (b, hq, sl, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, sl, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, sl, d), jnp.float32)
     oracle = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
     want, us = timed(lambda: jax.block_until_ready(oracle(q, k, v)))
     got = flash_attention_bhld(q, k, v, causal=True, block_q=128, block_k=128)
     err = float(jnp.max(jnp.abs(got - oracle(q, k, v))))
-    emit("kernel/flash_attention", us, f"max_err={err:.2e};shape=b{b}h{hq}l{l}d{d}")
+    emit("kernel/flash_attention", us, f"max_err={err:.2e};shape=b{b}h{hq}l{sl}d{d}")
 
     # ssd chunk scan
     from repro.models.ssm import ssd_chunked as ssd_jnp
     bs, L, H, P, N = 2, 512, 4, 16, 32
-    ks = jax.random.split(rng, 5)
+    ks = jax.random.split(jax.random.fold_in(rng, 1), 5)
     x = jax.random.normal(ks[0], (bs, L, H, P))
     dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, L, H)))
     a = -jnp.exp(jax.random.normal(ks[2], (H,)))
@@ -51,9 +50,11 @@ def run() -> None:
 
     # fused adam
     n = 1 << 16
-    ks = jax.random.split(rng, 4)
+    ks = jax.random.split(jax.random.fold_in(rng, 2), 4)
     p = jax.random.normal(ks[0], (n,))
-    m = jnp.zeros(n); vv = jnp.zeros(n); g = jax.random.normal(ks[1], (n,))
+    m = jnp.zeros(n)
+    vv = jnp.zeros(n)
+    g = jax.random.normal(ks[1], (n,))
     oracle3 = jax.jit(lambda p, m, v, g: ref.adam_ref(
         p, m, v, g, lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, t=1))
     (rp, _, _), us = timed(lambda: jax.block_until_ready(oracle3(p, m, vv, g)))

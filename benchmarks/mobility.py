@@ -50,7 +50,7 @@ def _setup(n_ues: int, seed: int = 0):
                     inner_batch=4, outer_batch=4, hessian_batch=4))
     model = build_model(cfg.model)
     data = synthetic_mnist(n=max(2500, 10 * n_ues), seed=seed)
-    clients = partition_noniid(data, n_ues, l=4, seed=seed)
+    clients = partition_noniid(data, n_ues, n_labels=4, seed=seed)
     return cfg, model, clients
 
 

@@ -8,11 +8,11 @@ from benchmarks.common import emit, standard_fl_setup
 def run() -> None:
     from repro.fl.simulation import run_simulation
 
-    for l in (2, 4, 6, 8):
-        cfg, model, clients = standard_fl_setup(n_ues=10, l=l, a=3)
+    for n_labels in (2, 4, 6, 8):
+        cfg, model, clients = standard_fl_setup(n_ues=10, n_labels=n_labels, a=3)
         res = run_simulation(cfg, model, clients, algorithm="perfed",
                              mode="semi", max_rounds=20, eval_every=20,
                              seed=0)
         us = res.total_time / max(res.rounds[-1], 1) * 1e6
-        emit(f"fig7/mnist/l={l}", us,
+        emit(f"fig7/mnist/l={n_labels}", us,
              f"ploss={res.losses[-1]:.4f};gloss={res.global_losses[-1]:.4f}")

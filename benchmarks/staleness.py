@@ -1,7 +1,6 @@
 """Fig. 10 — PerFedS² vs the staleness threshold S (equal η, A=5)."""
 from __future__ import annotations
 
-import dataclasses
 
 from benchmarks.common import emit, standard_fl_setup
 

@@ -16,7 +16,7 @@ cfg = ExperimentConfig(
                 alpha=0.03, beta=0.07, inner_batch=16, outer_batch=16,
                 hessian_batch=16))
 model = build_model(cfg.model)
-clients = partition_noniid(synthetic_mnist(n=3000), 10, l=4)
+clients = partition_noniid(synthetic_mnist(n=3000), 10, n_labels=4)
 
 print(f"{'algorithm':14s} {'rounds':>6s} {'sim time':>9s} "
       f"{'personalized':>12s} {'global':>8s}")

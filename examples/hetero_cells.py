@@ -17,7 +17,6 @@ from __future__ import annotations
 import dataclasses
 import sys
 
-import numpy as np
 
 from repro.config import (ExperimentConfig, FLConfig, MobilityConfig,
                           apply_overrides, parse_cli_overrides)
@@ -47,7 +46,7 @@ def main() -> None:
                 enabled=True, model="random_waypoint", speed_mps=30.0,
                 n_cells=3, hierarchy=True, cloud_sync_every=4,
                 cell_bandwidth_hz=BUDGETS, association=assoc))
-            clients = partition_noniid(data, N_UES, l=4, seed=0)
+            clients = partition_noniid(data, N_UES, n_labels=4, seed=0)
             res = run_simulation(c, model, clients, algorithm="perfed",
                                  mode="semi", bandwidth_policy=policy,
                                  max_rounds=ROUNDS, eval_every=4, seed=0,

@@ -52,7 +52,7 @@ def main() -> None:
     }
 
     for label, c in regimes.items():
-        clients = partition_noniid(data, N_UES, l=4, seed=0)
+        clients = partition_noniid(data, N_UES, n_labels=4, seed=0)
         res = run_simulation(c, model, clients, algorithm="perfed",
                              mode="semi", bandwidth_policy="equal",
                              max_rounds=ROUNDS, eval_every=4, seed=0,

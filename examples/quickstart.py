@@ -19,7 +19,7 @@ cfg = ExperimentConfig(
 
 # 2) non-iid federated data: every UE holds l=4 of the 10 classes
 model = build_model(cfg.model)
-clients = partition_noniid(synthetic_mnist(n=4000), cfg.fl.n_ues, l=4)
+clients = partition_noniid(synthetic_mnist(n=4000), cfg.fl.n_ues, n_labels=4)
 
 # 3) run the full system: wireless channels, Theorem-4 bandwidth, Alg.1
 #    semi-synchronous server, Eq.-7 meta-gradients

@@ -29,9 +29,10 @@ params = model.init(rng)
 users = [synthetic_lm_corpus(4096, vocab=cfg.vocab_size, seed=s)
          for s in (10, 11)]
 
-def batch_from(corpus, n=8, l=64, off=0):
-    toks = np.stack([corpus[i * l + off:(i + 1) * l + off] for i in range(n)])
-    targ = np.stack([corpus[i * l + 1 + off:(i + 1) * l + 1 + off]
+def batch_from(corpus, n=8, sl=64, off=0):
+    toks = np.stack([corpus[i * sl + off:(i + 1) * sl + off]
+                     for i in range(n)])
+    targ = np.stack([corpus[i * sl + 1 + off:(i + 1) * sl + 1 + off]
                      for i in range(n)])
     return {"tokens": jnp.asarray(toks), "targets": jnp.asarray(targ)}
 
@@ -50,7 +51,7 @@ for ui, corpus in enumerate(users):
 # batched serving loop with the personalized weights
 prefill = jax.jit(lambda p, t: model.prefill(p, t, 128))
 decode = jax.jit(model.decode_step)
-prompts = batch_from(users[0], n=4, l=32)["tokens"]
+prompts = batch_from(users[0], n=4, sl=32)["tokens"]
 t0 = time.time()
 logits, cache = prefill(adapted_params[0], prompts)
 tok = jnp.argmax(logits, -1).reshape(4, 1).astype(jnp.int32)

@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.config import ExperimentConfig, FLConfig, TrainConfig

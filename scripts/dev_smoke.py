@@ -10,7 +10,8 @@ from repro.models import build_model
 rng = jax.random.PRNGKey(0)
 
 which = sys.argv[1:] or [a for a in ARCH_IDS]
-for arch in which:
+for n_arch, arch in enumerate(which):
+    data_key = jax.random.fold_in(rng, n_arch)
     cfg = get_config(arch)
     if cfg.family == "small":
         model = build_model(cfg)
@@ -30,10 +31,11 @@ for arch in which:
     params = model.init(rng)
     B, L = 2, 64
     if red.family == "audio":
-        toks = jax.random.randint(rng, (B, L, red.num_audio_codebooks), 0, red.vocab_size)
+        toks = jax.random.randint(data_key, (B, L, red.num_audio_codebooks),
+                                  0, red.vocab_size)
         batch = {"tokens": toks, "targets": toks}
     else:
-        toks = jax.random.randint(rng, (B, L), 0, red.vocab_size)
+        toks = jax.random.randint(data_key, (B, L), 0, red.vocab_size)
         batch = {"tokens": toks, "targets": toks}
     loss, aux = model.loss(params, batch)
     assert jnp.isfinite(loss), (arch, loss)

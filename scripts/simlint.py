@@ -1,0 +1,14 @@
+#!/usr/bin/env python
+"""simlint launcher — makes ``python scripts/simlint.py src`` work from
+the repo root without an installed package or PYTHONPATH."""
+import sys
+from pathlib import Path
+
+_SRC = Path(__file__).resolve().parent.parent / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,6 @@ the event loop behind.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import sys
 

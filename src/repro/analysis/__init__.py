@@ -1,0 +1,26 @@
+"""repro.analysis — simlint, the repo's invariant checker.
+
+Static AST checks for the contracts the simulator relies on: RNG draw
+schedules (SIM1xx), host/device boundaries in hot-path modules (SIM2xx),
+jit purity (SIM3xx), and the observability read-only contract (SIM4xx).
+
+Run it as ``python scripts/simlint.py src`` or
+``python -m repro.analysis src``.
+"""
+from repro.analysis.core import (
+    Baseline,
+    BaselineEntry,
+    Finding,
+    LintReport,
+    lint_text,
+    run_paths,
+)
+
+__all__ = [
+    "Baseline",
+    "BaselineEntry",
+    "Finding",
+    "LintReport",
+    "lint_text",
+    "run_paths",
+]

@@ -1,0 +1,996 @@
+"""simlint rules — the repo's simulator invariants as AST checks.
+
+Four families, each born from a real incident class:
+
+SIM1xx  RNG discipline
+    SIM101  PRNG key reuse: the same key consumed by two ``jax.random``
+            draws (or ``split``) with no rebinding between them.
+    SIM102  ``PRNGKey(<literal>)`` in library code — seeds must flow
+            from config so sweeps/tests control them.
+    SIM103  ``np.random`` / stdlib ``random`` under ``src/repro/`` —
+            host RNG streams are allowed only where a pinned draw
+            schedule is documented (baseline / suppression).
+    SIM104  RNG draw inside a Python-level branch: the draw *schedule*
+            then depends on host data — the PR-5 mobility-bug shape
+            (``advance_to(t1); advance_to(t2)`` consumed a different
+            stream than ``advance_to(t2)``).
+
+SIM2xx  host/device boundary (hot-path modules only)
+    SIM201  ``.item()`` / ``.tolist()`` — implicit device→host sync.
+    SIM202  ``np.asarray`` / ``np.array`` / ``jax.device_get`` — host
+            materialisation; each hot-path use needs a justification.
+    SIM203  ``float()/int()/bool()`` directly on a ``jnp``/``jax``
+            expression — an implicit blocking transfer.
+
+SIM3xx  jit purity (functions reachable from jit/vmap/scan/pallas roots)
+    SIM301  ``print`` / ``breakpoint`` inside traced code.
+    SIM302  wall-clock reads (``time.*`` / ``datetime.now``) — traced
+            once, then frozen into the compiled program.
+    SIM303  tracer/telemetry calls (``obs.CURRENT.span`` etc.) inside
+            traced code — spans cannot measure inside a jit.
+    SIM304  mutation of enclosing state (``global``/``nonlocal``,
+            stores into free/parameter containers) — silently traced
+            away or wrong under retracing.
+
+SIM4xx  observability read-only (the PR-7 contract)
+    SIM401  ``src/repro/obs`` importing simulator packages.
+    SIM402  obs code calling state-mutating simulator APIs.
+
+Every rule yields precise ``file:line:col`` findings; scoping decisions
+(which paths a rule patrols) live here, next to the rule they belong to.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.core import Finding, ModuleInfo, in_hot_path
+
+__all__ = ["REGISTRY", "Rule", "rule"]
+
+
+class Rule:
+    code = "SIM000"
+    name = "abstract"
+    doc = ""
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        raise NotImplementedError
+
+
+REGISTRY: List[Rule] = []
+
+
+def rule(cls):
+    REGISTRY.append(cls())
+    return cls
+
+
+# ----------------------------------------------------------------------
+# import alias resolution
+# ----------------------------------------------------------------------
+class Aliases:
+    """Maps local names to canonical dotted module paths, so rules see
+    ``jr.normal`` as ``jax.random.normal`` and know whether a bare
+    ``random`` is the stdlib module or ``jax.random``."""
+
+    def __init__(self, tree: ast.Module):
+        self.names: Dict[str, str] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.names[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module \
+                    and node.level == 0:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.names[a.asname or a.name] = \
+                        f"{node.module}.{a.name}"
+
+    def resolve(self, expr: ast.expr) -> Optional[str]:
+        """Canonical dotted path of a Name/Attribute chain, or None."""
+        parts: List[str] = []
+        node = expr
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        base = self.names.get(node.id, node.id)
+        parts.append(base)
+        return ".".join(reversed(parts))
+
+
+def dotted(expr: ast.expr) -> Optional[str]:
+    """Literal dotted text of a Name/Attribute chain (no alias mapping)."""
+    parts: List[str] = []
+    node = expr
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+# jax.random draw functions that CONSUME a key (split also consumes: using
+# a key after splitting it is the classic reuse bug).  fold_in and
+# PRNGKey/key derive/create and do not consume.
+JAX_CONSUMERS = {
+    "ball", "bernoulli", "beta", "binomial", "bits", "categorical",
+    "cauchy", "chisquare", "choice", "dirichlet", "double_sided_maxwell",
+    "exponential", "f", "gamma", "generalized_normal", "geometric",
+    "gumbel", "laplace", "loggamma", "logistic", "lognormal", "maxwell",
+    "multivariate_normal", "normal", "orthogonal", "pareto", "permutation",
+    "poisson", "rademacher", "randint", "rayleigh", "split", "t",
+    "triangular", "truncated_normal", "uniform", "wald", "weibull_min",
+}
+# numpy Generator draw methods (receiver name must look like an rng)
+NP_DRAW_METHODS = {
+    "beta", "binomial", "bytes", "chisquare", "choice", "dirichlet",
+    "exponential", "f", "gamma", "geometric", "gumbel", "integers",
+    "laplace", "logistic", "lognormal", "multinomial",
+    "multivariate_normal", "negative_binomial", "noncentral_chisquare",
+    "normal", "pareto", "permutation", "permuted", "poisson", "power",
+    "random", "rayleigh", "shuffle", "standard_cauchy",
+    "standard_exponential", "standard_gamma", "standard_normal",
+    "standard_t", "triangular", "uniform", "vonmises", "wald", "weibull",
+    "zipf",
+}
+
+
+def _jax_random_member(aliases: Aliases, func: ast.expr) -> Optional[str]:
+    """'normal' for a call target resolving to jax.random.normal, etc."""
+    path = aliases.resolve(func)
+    if path and path.startswith("jax.random."):
+        member = path[len("jax.random."):]
+        if "." not in member:
+            return member
+    return None
+
+
+def _rng_method(func: ast.expr) -> Optional[Tuple[str, str]]:
+    """(receiver, method) for ``<something rng-ish>.<draw-method>()``."""
+    if not isinstance(func, ast.Attribute):
+        return None
+    recv = dotted(func.value)
+    if recv is None:
+        return None
+    leaf = recv.rsplit(".", 1)[-1]
+    if (leaf == "rng" or leaf.endswith("_rng") or leaf == "gen") \
+            and func.attr in NP_DRAW_METHODS:
+        return recv, func.attr
+    return None
+
+
+def _calls_in_order(node: ast.AST) -> List[ast.Call]:
+    out: List[ast.Call] = []
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            out.append(sub)
+    out.sort(key=lambda c: (c.lineno, c.col_offset))
+    return out
+
+
+# ----------------------------------------------------------------------
+# SIM101 — key reuse
+# ----------------------------------------------------------------------
+class _KeyState:
+    """Per-scope key freshness, branch-aware (see _walk_stmts)."""
+
+    def __init__(self):
+        self.consumed: Dict[str, int] = {}   # key name -> line consumed
+
+    def copy(self) -> "_KeyState":
+        s = _KeyState()
+        s.consumed = dict(self.consumed)
+        return s
+
+    def merge(self, other: "_KeyState") -> None:
+        for k, ln in other.consumed.items():
+            self.consumed.setdefault(k, ln)
+
+
+@rule
+class KeyReuse(Rule):
+    code = "SIM101"
+    name = "prng-key-reuse"
+    doc = ("the same PRNG key is consumed by two jax.random calls with "
+           "no split/fold_in rebinding in between")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        aliases = Aliases(mod.tree)
+        findings: Dict[Tuple[int, str], Finding] = {}
+        scopes: List[Sequence[ast.stmt]] = [mod.tree.body]
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                scopes.append(node.body)
+        for body in scopes:
+            self._walk_stmts(body, _KeyState(), aliases, findings)
+        for key in sorted(findings):
+            f = findings[key]
+            yield Finding(f.code, mod.path, f.line, f.col, f.message)
+
+    # -- statement walker ------------------------------------------------
+    def _walk_stmts(self, stmts: Sequence[ast.stmt], state: _KeyState,
+                    aliases: Aliases,
+                    findings: Dict[Tuple[int, str], Finding]) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                continue                 # nested scopes walked separately
+            if isinstance(stmt, ast.If):
+                self._eval_expr(stmt.test, state, aliases, findings)
+                s_then = state.copy()
+                self._walk_stmts(stmt.body, s_then, aliases, findings)
+                s_else = state.copy()
+                self._walk_stmts(stmt.orelse, s_else, aliases, findings)
+                state.consumed = dict(s_then.consumed)
+                state.merge(s_else)
+                continue
+            if isinstance(stmt, (ast.For, ast.AsyncFor, ast.While)):
+                if isinstance(stmt, ast.While):
+                    self._eval_expr(stmt.test, state, aliases, findings)
+                else:
+                    self._eval_expr(stmt.iter, state, aliases, findings)
+                    self._store_target(stmt.target, state)
+                # two passes catch draws that reuse a key across
+                # iterations without rebinding it; findings dedupe by
+                # (line, code) so the second pass adds no noise
+                for _ in range(2):
+                    self._walk_stmts(stmt.body, state, aliases, findings)
+                self._walk_stmts(stmt.orelse, state, aliases, findings)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                for item in stmt.items:
+                    self._eval_expr(item.context_expr, state, aliases,
+                                    findings)
+                    if item.optional_vars is not None:
+                        self._store_target(item.optional_vars, state)
+                self._walk_stmts(stmt.body, state, aliases, findings)
+                continue
+            if isinstance(stmt, ast.Try):
+                self._walk_stmts(stmt.body, state, aliases, findings)
+                for h in stmt.handlers:
+                    self._walk_stmts(h.body, state.copy(), aliases,
+                                     findings)
+                self._walk_stmts(stmt.orelse, state, aliases, findings)
+                self._walk_stmts(stmt.finalbody, state, aliases, findings)
+                continue
+            # plain statement: evaluate loads, then apply stores
+            self._eval_expr(stmt, state, aliases, findings)
+            for sub in ast.walk(stmt):
+                if isinstance(sub, (ast.Assign, ast.AnnAssign,
+                                    ast.AugAssign)):
+                    targets = (sub.targets
+                               if isinstance(sub, ast.Assign)
+                               else [sub.target])
+                    for t in targets:
+                        self._store_target(t, state)
+                elif isinstance(sub, ast.Delete):
+                    for t in sub.targets:
+                        self._store_target(t, state)
+                elif isinstance(sub, ast.NamedExpr):
+                    self._store_target(sub.target, state)
+
+    def _store_target(self, target: ast.expr, state: _KeyState) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._store_target(elt, state)
+            return
+        if isinstance(target, ast.Starred):
+            self._store_target(target.value, state)
+            return
+        name = dotted(target)
+        if name is not None:
+            state.consumed.pop(name, None)
+
+    def _eval_expr(self, node: ast.AST, state: _KeyState, aliases: Aliases,
+                   findings: Dict[Tuple[int, str], Finding]) -> None:
+        for call in _calls_in_order(node):
+            member = _jax_random_member(aliases, call.func)
+            if member is None or member not in JAX_CONSUMERS:
+                continue
+            key_arg = self._key_arg(call)
+            if key_arg is None:
+                continue
+            name = dotted(key_arg)
+            if name is None:
+                continue                # derived expression — fine
+            prev = state.consumed.get(name)
+            if prev is not None:
+                fkey = (call.lineno, name)
+                if fkey not in findings:
+                    findings[fkey] = Finding(
+                        self.code, "", call.lineno, call.col_offset,
+                        f"PRNG key '{name}' reused (already consumed at "
+                        f"line {prev}); split or fold_in first")
+            else:
+                state.consumed[name] = call.lineno
+
+    @staticmethod
+    def _key_arg(call: ast.Call) -> Optional[ast.expr]:
+        if call.args:
+            return call.args[0]
+        for kw in call.keywords:
+            if kw.arg == "key":
+                return kw.value
+        return None
+
+
+# ----------------------------------------------------------------------
+# SIM102 — literal PRNGKey in library code
+# ----------------------------------------------------------------------
+@rule
+class LiteralKey(Rule):
+    code = "SIM102"
+    name = "literal-prng-seed"
+    doc = ("jax.random.PRNGKey(<literal>) in library code — seeds must "
+           "come from config/arguments (tests and examples are exempt)")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not mod.in_src_repro() or mod.is_testish():
+            return
+        aliases = Aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            member = _jax_random_member(aliases, node.func)
+            if member not in ("PRNGKey", "key"):
+                continue
+            if node.args and isinstance(node.args[0], ast.Constant):
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f"jax.random.{member}({node.args[0].value!r}) with a "
+                    f"literal seed in library code; plumb the seed from "
+                    f"config")
+
+
+# ----------------------------------------------------------------------
+# SIM103 — host RNG under src/repro
+# ----------------------------------------------------------------------
+@rule
+class HostRng(Rule):
+    code = "SIM103"
+    name = "host-rng-in-library"
+    doc = ("np.random / stdlib random under src/repro — host RNG streams "
+           "need a documented, pinned draw schedule (baseline each one)")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not mod.in_src_repro():
+            return
+        aliases = Aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                modname = (node.module or "" if
+                           isinstance(node, ast.ImportFrom)
+                           else "")
+                names = ([a.name for a in node.names]
+                         if isinstance(node, ast.Import) else [])
+                if modname == "random" or "random" in names:
+                    yield Finding(
+                        self.code, mod.path, node.lineno,
+                        node.col_offset,
+                        "stdlib 'random' imported in library code; use "
+                        "a seeded np.random.Generator or jax.random")
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            path = aliases.resolve(node.func)
+            if path is None:
+                continue
+            if path.startswith("numpy.random.") or \
+                    path.startswith("np.random."):
+                member = path.rsplit(".", 1)[-1]
+                kind = ("module-level numpy RNG (shared global state)"
+                        if member not in ("default_rng", "Generator",
+                                          "SeedSequence", "PCG64")
+                        else "host RNG stream")
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f"{kind}: np.random.{member} in library code — "
+                    f"host draws need a pinned, documented schedule")
+            elif path.startswith("random.") and \
+                    aliases.names.get("random", "random") == "random":
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f"stdlib {path} in library code; use a seeded "
+                    f"np.random.Generator or jax.random")
+
+
+# ----------------------------------------------------------------------
+# SIM104 — draw schedule branches on Python data
+# ----------------------------------------------------------------------
+@rule
+class BranchedDraw(Rule):
+    code = "SIM104"
+    name = "data-dependent-draw-schedule"
+    doc = ("an RNG draw inside a Python-level branch makes the draw "
+           "*schedule* depend on host data (the PR-5 bug shape); hoist "
+           "the draw to a fixed schedule or derive keys via fold_in")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not mod.in_src_repro():
+            return
+        aliases = Aliases(mod.tree)
+        yield from self._walk(mod, aliases, mod.tree.body, 0)
+
+    def _walk(self, mod: ModuleInfo, aliases: Aliases,
+              stmts: Sequence[ast.stmt], depth: int) -> Iterator[Finding]:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._walk(mod, aliases, stmt.body, 0)
+                continue
+            if isinstance(stmt, ast.ClassDef):
+                yield from self._walk(mod, aliases, stmt.body, depth)
+                continue
+            if isinstance(stmt, ast.If):
+                yield from self._exprs(mod, aliases, [stmt.test], depth)
+                yield from self._walk(mod, aliases, stmt.body, depth + 1)
+                yield from self._walk(mod, aliases, stmt.orelse,
+                                      depth + 1)
+                continue
+            if isinstance(stmt, ast.While):
+                yield from self._exprs(mod, aliases, [stmt.test],
+                                       depth + 1)
+                yield from self._walk(mod, aliases, stmt.body, depth + 1)
+                continue
+            if isinstance(stmt, (ast.For, ast.AsyncFor)):
+                yield from self._exprs(mod, aliases, [stmt.iter], depth)
+                yield from self._walk(mod, aliases, stmt.body, depth)
+                yield from self._walk(mod, aliases, stmt.orelse, depth)
+                continue
+            if isinstance(stmt, (ast.With, ast.AsyncWith)):
+                yield from self._walk(mod, aliases, stmt.body, depth)
+                continue
+            if isinstance(stmt, ast.Try):
+                for block in (stmt.body, stmt.orelse, stmt.finalbody):
+                    yield from self._walk(mod, aliases, block, depth)
+                for h in stmt.handlers:
+                    yield from self._walk(mod, aliases, h.body, depth + 1)
+                continue
+            yield from self._exprs(mod, aliases, [stmt], depth)
+
+    def _exprs(self, mod: ModuleInfo, aliases: Aliases,
+               nodes: Sequence[ast.AST], depth: int) -> Iterator[Finding]:
+        for node in nodes:
+            for call in _calls_in_order(node):
+                extra = self._cond_depth(node, call)
+                if depth + extra == 0:
+                    continue
+                member = _jax_random_member(aliases, call.func)
+                is_draw = (member in JAX_CONSUMERS and member != "split"
+                           ) or _rng_method(call.func) is not None
+                if not is_draw:
+                    continue
+                what = (f"jax.random.{member}" if member
+                        else dotted(call.func))
+                yield Finding(
+                    self.code, mod.path, call.lineno, call.col_offset,
+                    f"{what} draw inside a conditional: the RNG draw "
+                    f"schedule now depends on Python-level state")
+
+    @staticmethod
+    def _cond_depth(root: ast.AST, call: ast.Call) -> int:
+        """Extra conditional nesting of ``call`` *within* a statement:
+        ternaries and comprehension ifs."""
+        depth = 0
+        for node in ast.walk(root):
+            if isinstance(node, ast.IfExp):
+                for branch in (node.body, node.orelse):
+                    if call in ast.walk(branch):
+                        depth += 1
+            elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                   ast.DictComp, ast.GeneratorExp)):
+                for gen in node.generators:
+                    for cond in gen.ifs:
+                        if call in ast.walk(cond):
+                            depth += 1
+        return depth
+
+
+# ----------------------------------------------------------------------
+# SIM2xx — host/device boundary in hot-path modules
+# ----------------------------------------------------------------------
+def _imports_jax(mod: ModuleInfo) -> bool:
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Import):
+            if any(a.name == "jax" or a.name.startswith("jax.")
+                   for a in node.names):
+                return True
+        elif isinstance(node, ast.ImportFrom):
+            if (node.module or "").split(".")[0] == "jax":
+                return True
+    return False
+
+
+@rule
+class HostSyncMethods(Rule):
+    code = "SIM201"
+    name = "implicit-host-sync-method"
+    doc = (".item()/.tolist() in a hot-path module — implicit "
+           "device-to-host sync; move it off the per-event path or "
+           "justify with a suppression")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not in_hot_path(mod.path) or not _imports_jax(mod):
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("item", "tolist"):
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f".{node.func.attr}() blocks on device work in a "
+                    f"hot-path module")
+
+
+@rule
+class HostMaterialise(Rule):
+    code = "SIM202"
+    name = "host-materialisation"
+    doc = ("np.asarray / np.array / jax.device_get in a hot-path module "
+           "pulls device values to host when fed a jax array; every use "
+           "needs a justification (suppression) or a redesign")
+
+    TARGETS = ("numpy.asarray", "numpy.array", "np.asarray", "np.array",
+               "jax.device_get")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not in_hot_path(mod.path) or not _imports_jax(mod):
+            return
+        aliases = Aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            path = aliases.resolve(node.func)
+            if path in self.TARGETS:
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f"{path} in a hot-path module — host "
+                    f"materialisation; justify (host-only value) or "
+                    f"keep it on device")
+
+
+@rule
+class ScalarCoercion(Rule):
+    code = "SIM203"
+    name = "scalar-coercion-of-device-value"
+    doc = ("float()/int()/bool() wrapped directly around a jnp/jax "
+           "expression is an implicit blocking device sync (static "
+           "metadata reads — .shape/.ndim/.dtype — are exempt)")
+
+    METADATA = ("shape", "ndim", "dtype", "itemsize")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not in_hot_path(mod.path) or not _imports_jax(mod):
+            return
+        aliases = Aliases(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int", "bool")
+                    and node.args):
+                continue
+            # anything consumed through a .shape/.ndim/... attribute is a
+            # static metadata read, not a device value
+            meta_subtrees = [
+                a.value for a in ast.walk(node.args[0])
+                if isinstance(a, ast.Attribute) and a.attr in self.METADATA]
+            for sub in ast.walk(node.args[0]):
+                if isinstance(sub, ast.Call):
+                    if any(sub in ast.walk(m) for m in meta_subtrees):
+                        continue
+                    path = aliases.resolve(sub.func)
+                    if path and (path.startswith("jax.numpy.")
+                                 or path.startswith("jnp.")
+                                 or path.startswith("jax.")):
+                        yield Finding(
+                            self.code, mod.path, node.lineno,
+                            node.col_offset,
+                            f"{node.func.id}() directly on a "
+                            f"{path.split('.')[0]} expression — "
+                            f"implicit device sync")
+                        break
+            else:
+                continue
+
+
+# ----------------------------------------------------------------------
+# SIM3xx — jit purity
+# ----------------------------------------------------------------------
+# transforms whose function arguments are traced (arg indices to inspect;
+# None = every positional arg)
+TRACED_CALLS: Dict[str, Optional[Tuple[int, ...]]] = {
+    "jax.jit": (0,), "jax.vmap": (0,), "jax.pmap": (0,),
+    "jax.grad": (0,), "jax.value_and_grad": (0,), "jax.jacfwd": (0,),
+    "jax.jacrev": (0,), "jax.hessian": (0,), "jax.checkpoint": (0,),
+    "jax.remat": (0,), "jax.lax.scan": (0,), "jax.lax.map": (0,),
+    "jax.lax.while_loop": (0, 1), "jax.lax.fori_loop": (2,),
+    "jax.lax.cond": (1, 2), "jax.lax.switch": None,
+    "jax.lax.associative_scan": (0,),
+    "jax.experimental.pallas.pallas_call": (0,),
+    "jax.experimental.shard_map.shard_map": (0,),
+}
+TRACED_DECORATORS = {"jax.jit", "jax.vmap", "jax.pmap", "jax.checkpoint",
+                     "jax.remat"}
+
+
+class _FnNode:
+    def __init__(self, node, qual: str):
+        self.node = node
+        self.qual = qual
+        self.calls: Set[str] = set()      # simple callee names
+        self.root = False
+
+
+def _collect_jit_graph(mod: ModuleInfo, aliases: Aliases
+                       ) -> Tuple[Dict[str, List[_FnNode]],
+                                  List[_FnNode], List[ast.Lambda]]:
+    """Module-wide function defs, jit roots, and traced lambdas."""
+    by_name: Dict[str, List[_FnNode]] = {}
+    fns: List[_FnNode] = []
+
+    def visit(node: ast.AST, prefix: str) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef,
+                                  ast.AsyncFunctionDef)):
+                fn = _FnNode(child, f"{prefix}{child.name}")
+                fns.append(fn)
+                by_name.setdefault(child.name, []).append(fn)
+                visit(child, f"{prefix}{child.name}.")
+            elif isinstance(child, ast.ClassDef):
+                visit(child, f"{prefix}{child.name}.")
+            else:
+                visit(child, prefix)
+
+    visit(mod.tree, "")
+
+    for fn in fns:
+        for sub in ast.walk(fn.node):
+            if isinstance(sub, ast.Call):
+                if isinstance(sub.func, ast.Name):
+                    fn.calls.add(sub.func.id)
+                elif isinstance(sub.func, ast.Attribute) \
+                        and isinstance(sub.func.value, ast.Name) \
+                        and sub.func.value.id == "self":
+                    fn.calls.add(sub.func.attr)
+
+    roots: List[_FnNode] = []
+    lambdas: List[ast.Lambda] = []
+
+    def resolve_traced(path: Optional[str]) -> Optional[str]:
+        if path is None:
+            return None
+        norm = path.replace("lax.", "jax.lax.") \
+            if path.startswith("lax.") else path
+        if norm in TRACED_CALLS:
+            return norm
+        # pallas aliases: pl.pallas_call, pallas_call
+        if norm.endswith("pallas_call"):
+            return "jax.experimental.pallas.pallas_call"
+        if norm.endswith("shard_map"):
+            return "jax.experimental.shard_map.shard_map"
+        return None
+
+    def mark(name_node: ast.expr) -> None:
+        if isinstance(name_node, ast.Lambda):
+            lambdas.append(name_node)
+            return
+        if isinstance(name_node, ast.Name):
+            for fn in by_name.get(name_node.id, []):
+                fn.root = True
+        elif isinstance(name_node, ast.Attribute) \
+                and isinstance(name_node.value, ast.Name) \
+                and name_node.value.id == "self":
+            for fn in by_name.get(name_node.attr, []):
+                fn.root = True
+
+    # decorators
+    for fn in fns:
+        if not isinstance(fn.node, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef)):
+            continue
+        for dec in fn.node.decorator_list:
+            target = dec.func if isinstance(dec, ast.Call) else dec
+            path = aliases.resolve(target)
+            if path == "functools.partial" and isinstance(dec, ast.Call) \
+                    and dec.args:
+                path = aliases.resolve(dec.args[0])
+            if resolve_traced(path) or path in TRACED_DECORATORS:
+                fn.root = True
+
+    # call sites
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        path = resolve_traced(aliases.resolve(node.func))
+        if path is None:
+            # functools.partial(jax.jit, f) style
+            p = aliases.resolve(node.func)
+            if p == "functools.partial" and node.args:
+                inner = resolve_traced(aliases.resolve(node.args[0]))
+                if inner is not None and len(node.args) > 1:
+                    mark(node.args[1])
+            continue
+        arg_idx = TRACED_CALLS.get(path, (0,))
+        args = node.args
+        if arg_idx is None:
+            for a in args:
+                mark(a)
+        else:
+            for i in arg_idx:
+                if i < len(args):
+                    mark(args[i])
+
+    # closure: reachable = roots + transitively called module functions
+    work = [fn for fn in fns if fn.root]
+    for fn in work:
+        roots.append(fn)
+    seen = {id(fn) for fn in work}
+    while work:
+        fn = work.pop()
+        for callee in fn.calls:
+            for cand in by_name.get(callee, []):
+                if id(cand) not in seen:
+                    seen.add(id(cand))
+                    cand.root = True
+                    work.append(cand)
+                    roots.append(cand)
+    return by_name, roots, lambdas
+
+
+def _local_bindings(fn_node) -> Set[str]:
+    """Names bound by simple assignment/for/with inside the function
+    (parameters excluded — mutating a parameter container leaks out)."""
+    bound: Set[str] = set()
+    for sub in ast.walk(fn_node):
+        if isinstance(sub, ast.Name) and isinstance(sub.ctx, ast.Store):
+            bound.add(sub.id)
+        elif isinstance(sub, (ast.For, ast.AsyncFor)):
+            for t in ast.walk(sub.target):
+                if isinstance(t, ast.Name):
+                    bound.add(t.id)
+        elif isinstance(sub, ast.comprehension):
+            for t in ast.walk(sub.target):
+                if isinstance(t, ast.Name):
+                    bound.add(t.id)
+    return bound
+
+
+def _own_body(fn_node) -> Iterator[ast.AST]:
+    """Walk a function body without descending into nested defs (they are
+    separate graph nodes)."""
+    stack: List[ast.AST] = list(fn_node.body)
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                continue
+            stack.append(child)
+
+
+MUTATOR_METHODS = {"append", "extend", "add", "update", "pop", "clear",
+                   "insert", "remove", "setdefault", "popitem",
+                   "discard", "sort", "reverse"}
+
+
+class _JitPurityBase(Rule):
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        aliases = Aliases(mod.tree)
+        _, reachable, lambdas = _collect_jit_graph(mod, aliases)
+        emitted: Set[Tuple[str, int]] = set()
+        for fn in reachable:
+            for f in self.check_fn(mod, aliases, fn.node, fn.qual,
+                                   list(_own_body(fn.node)),
+                                   _local_bindings(fn.node)):
+                k = (f.code, f.line)
+                if k not in emitted:
+                    emitted.add(k)
+                    yield f
+        for lam in lambdas:
+            body = list(ast.walk(lam.body))
+            for f in self.check_fn(mod, aliases, lam, "<lambda>", body,
+                                   set()):
+                k = (f.code, f.line)
+                if k not in emitted:
+                    emitted.add(k)
+                    yield f
+
+    def check_fn(self, mod, aliases, fn_node, qual, body, local):
+        raise NotImplementedError
+
+
+@rule
+class JitPrint(_JitPurityBase):
+    code = "SIM301"
+    name = "print-in-traced-code"
+    doc = ("print/breakpoint inside a jit/vmap/scan-reachable function "
+           "runs at trace time only; use jax.debug.print")
+
+    def check_fn(self, mod, aliases, fn_node, qual, body, local):
+        for node in body:
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Name) \
+                    and node.func.id in ("print", "breakpoint") \
+                    and node.func.id not in local:
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f"{node.func.id}() inside jit-traced '{qual}' — "
+                    f"runs once at trace time; use jax.debug.print")
+
+
+@rule
+class JitClock(_JitPurityBase):
+    code = "SIM302"
+    name = "wall-clock-in-traced-code"
+    doc = ("time.*/datetime.now inside traced code is frozen at trace "
+           "time — time the dispatch outside, or use obs.device_call")
+
+    CLOCKS = {"time.time", "time.perf_counter", "time.monotonic",
+              "time.process_time", "time.time_ns", "time.sleep",
+              "datetime.datetime.now", "datetime.datetime.utcnow"}
+
+    def check_fn(self, mod, aliases, fn_node, qual, body, local):
+        for node in body:
+            if isinstance(node, ast.Call):
+                path = aliases.resolve(node.func)
+                if path in self.CLOCKS:
+                    yield Finding(
+                        self.code, mod.path, node.lineno,
+                        node.col_offset,
+                        f"{path}() inside jit-traced '{qual}' is "
+                        f"evaluated once at trace time")
+
+
+@rule
+class JitTracer(_JitPurityBase):
+    code = "SIM303"
+    name = "telemetry-in-traced-code"
+    doc = ("obs tracer spans/counters inside traced code measure trace "
+           "time, not run time — wrap the *dispatch* instead")
+
+    METHODS = {"span", "add", "device_call", "counter"}
+
+    def check_fn(self, mod, aliases, fn_node, qual, body, local):
+        for node in body:
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in self.METHODS):
+                continue
+            recv = dotted(node.func.value) or ""
+            parts = recv.split(".")
+            if "CURRENT" in parts or parts[0] in ("obs", "tracer") \
+                    or recv == "tr":
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f"tracer call {recv}.{node.func.attr}() inside "
+                    f"jit-traced '{qual}' — instrument the dispatch, "
+                    f"not the traced body")
+
+
+@rule
+class JitMutation(_JitPurityBase):
+    code = "SIM304"
+    name = "state-mutation-in-traced-code"
+    doc = ("global/nonlocal or stores into enclosing/parameter "
+           "containers inside traced code are silently traced away "
+           "or wrong under retracing (Pallas Ref params — '*_ref' "
+           "names — are exempt: Ref stores ARE the kernel output)")
+
+    @staticmethod
+    def _is_pallas_ref(name: str) -> bool:
+        return name.endswith("_ref") or name in ("o_ref", "out_ref",
+                                                 "ref")
+
+    def check_fn(self, mod, aliases, fn_node, qual, body, local):
+        for node in body:
+            if isinstance(node, (ast.Global, ast.Nonlocal)):
+                kw = ("global" if isinstance(node, ast.Global)
+                      else "nonlocal")
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f"'{kw} {', '.join(node.names)}' inside jit-traced "
+                    f"'{qual}' mutates enclosing state")
+                continue
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, (ast.Subscript, ast.Attribute)):
+                        root = t
+                        while isinstance(root, (ast.Subscript,
+                                                ast.Attribute)):
+                            root = root.value
+                        name = (root.id if isinstance(root, ast.Name)
+                                else None)
+                        if name is not None and name not in local \
+                                and not self._is_pallas_ref(name):
+                            yield Finding(
+                                self.code, mod.path, t.lineno,
+                                t.col_offset,
+                                f"store into non-local container "
+                                f"'{name}' inside jit-traced '{qual}' "
+                                f"— traced functions must be pure")
+                continue
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in MUTATOR_METHODS \
+                    and isinstance(node.func.value, ast.Name) \
+                    and node.func.value.id not in local:
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f".{node.func.attr}() on enclosing-scope "
+                    f"'{node.func.value.id}' inside jit-traced "
+                    f"'{qual}' — traced functions must be pure")
+
+
+# ----------------------------------------------------------------------
+# SIM4xx — observability read-only
+# ----------------------------------------------------------------------
+OBS_ALLOWED_IMPORTS = ("repro.obs", "repro.utils", "repro.config",
+                       "repro.analysis")
+
+
+@rule
+class ObsImports(Rule):
+    code = "SIM401"
+    name = "obs-imports-simulator"
+    doc = ("src/repro/obs must not import simulator packages — the "
+           "telemetry layer is read-only by construction (PR-7 "
+           "contract); pass objects in, do not reach out")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not mod.in_obs():
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                mods = [(a.name, node) for a in node.names]
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                mods = [(node.module or "", node)]
+            else:
+                continue
+            for name, n in mods:
+                if name.startswith("repro") and not any(
+                        name == ok or name.startswith(ok + ".")
+                        for ok in OBS_ALLOWED_IMPORTS):
+                    yield Finding(
+                        self.code, mod.path, n.lineno, n.col_offset,
+                        f"obs module imports simulator package "
+                        f"'{name}' — the telemetry layer must stay "
+                        f"read-only/import-free of the simulator")
+
+
+MUTATING_SIM_API = {
+    "on_arrival", "on_arrival_batch", "on_round_batch", "advance_to",
+    "handover", "cloud_sync", "step", "step_many", "sample_fading",
+    "sample_fading_batch", "make_servers", "pre_requeue",
+    "bind_link_budget", "round_update", "compute_payloads",
+    "compute_payloads_stacked",
+}
+
+
+@rule
+class ObsMutates(Rule):
+    code = "SIM402"
+    name = "obs-calls-simulator-mutator"
+    doc = ("obs code calling a state-mutating simulator API (advance_to,"
+           " on_arrival, sample_fading, ...) breaks the read-only "
+           "contract: tracing must never perturb a trajectory")
+
+    def check(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if not mod.in_obs():
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in MUTATING_SIM_API:
+                yield Finding(
+                    self.code, mod.path, node.lineno, node.col_offset,
+                    f".{node.func.attr}() called from the observability "
+                    f"layer — obs is read-only; it may look, not touch")

@@ -147,7 +147,8 @@ class ModelConfig:
                 num_experts=min(self.moe.num_experts, max_experts),
                 experts_per_token=min(self.moe.experts_per_token, 2),
                 num_shared_experts=min(self.moe.num_shared_experts, 1),
-                expert_d_ff=min(self.moe.expert_d_ff, 2 * d) if self.moe.expert_d_ff else 0,
+                expert_d_ff=(min(self.moe.expert_d_ff, 2 * d)
+                             if self.moe.expert_d_ff else 0),
                 capacity_factor=max(self.moe.capacity_factor, 8.0),  # dropless
             )
         if self.mla is not None:

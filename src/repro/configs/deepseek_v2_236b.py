@@ -1,6 +1,6 @@
 """DeepSeek-V2-236B — MLA (kv_lora 512) + MoE 160 routed top-6 + 2 shared.
 [arXiv:2405.04434]"""
-from repro.config import ModelConfig, MoEConfig, MLAConfig
+from repro.config import MLAConfig, ModelConfig, MoEConfig
 
 CONFIG = ModelConfig(
     name="deepseek-v2-236b",

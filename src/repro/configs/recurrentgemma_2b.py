@@ -1,6 +1,6 @@
 """RecurrentGemma-2B — RG-LRU + local attention (2 recurrent : 1 attn).
 [arXiv:2402.19427]"""
-from repro.config import ModelConfig, HybridConfig
+from repro.config import HybridConfig, ModelConfig
 
 CONFIG = ModelConfig(
     name="recurrentgemma-2b",

@@ -55,6 +55,7 @@ class HierarchicalServer:
         self.member_cell = np.zeros(n, dtype=np.int64)
         for c, srv in enumerate(self.cells):
             srv.ue_version[:] = NON_MEMBER
+            # simlint: disable-next=SIM202 -- host membership list
             idx = np.asarray(members[c], dtype=np.int64)
             srv.ue_version[idx] = 0
             self.member_cell[idx] = c
@@ -131,7 +132,9 @@ class HierarchicalServer:
         per-arrival path lets ``_advance_round``'s staleness snapshot see
         (``_finish`` strips it from membership afterwards either way).
         """
+        # simlint: disable-next=SIM202 -- host routing lists, not arrays
         cells = np.asarray(cells, dtype=np.int64)
+        # simlint: disable-next=SIM202 -- host routing lists, not arrays
         ues = np.asarray(ues, dtype=np.int64)
         last_cell = int(cells[-1])
         order = [c for c in dict.fromkeys(int(x) for x in cells)

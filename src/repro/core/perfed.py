@@ -15,12 +15,11 @@ forward-over-reverse ``jax.jvp`` through ``jax.grad`` — exact and O(params).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
-import jax.numpy as jnp
 
-from repro.utils import tree_axpy, tree_sub
+from repro.utils import tree_axpy
 
 LossFn = Callable[..., Any]   # loss_fn(params, batch, rng) -> (scalar, aux)
 

@@ -21,20 +21,16 @@ roofline profile.
 """
 from __future__ import annotations
 
-import functools
-from dataclasses import dataclass
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Callable, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro import sharding
 from repro.config import ExperimentConfig
 from repro.core import perfed
 from repro.kernels.stale_aggregate import (masked_aggregate_tree,
                                            stale_aggregate_tree)
 from repro.optim import Optimizer, clip_by_global_norm
-from repro.utils import tree_axpy, tree_scale, tree_zeros_like
 
 
 class SemiSyncState(NamedTuple):

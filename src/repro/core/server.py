@@ -14,7 +14,7 @@ math (what a "payload" is) lives in ``fl/client.py``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -112,9 +112,11 @@ class SemiSyncServer:
         if self._pending:
             raise RuntimeError("per-arrival uploads pending; feed rounds "
                                "through on_arrival consistently")
+        # simlint: disable-next=SIM202 -- host lane-index list
         ues = np.asarray(ues, dtype=np.int64)
         if taus is None:
             taus = self.round - self.ue_version[ues]
+        # simlint: disable-next=SIM202 -- taus is host bookkeeping
         self._pending_seg.append((ues, np.asarray(taus, np.int64), payloads))
         self._seg_n += len(ues)
         if self._seg_n > self.a:
@@ -166,12 +168,14 @@ class SemiSyncServer:
         """Aggregation mask: 1s, or normalised λ^τ staleness discounts."""
         lam = self.cfg.staleness_discount
         if lam < 1.0:
+            # simlint: disable-next=SIM202 -- taus is a host int list
             wts = np.array([lam ** tau for tau in taus])
             return wts * (self.a / max(wts.sum(), 1e-12))
         return np.ones(len(taus))
 
     def _advance_round(self, arrived_ues: List[int]) -> Dict[str, Any]:
         pi_row = np.zeros(self.cfg.n_ues, dtype=np.int64)
+        # simlint: disable-next=SIM202 -- host staleness counters
         stale_row = np.array([self.staleness(i) for i in range(self.cfg.n_ues)])
         for i in arrived_ues:
             pi_row[i] = 1

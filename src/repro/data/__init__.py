@@ -1,4 +1,16 @@
+from repro.data.partition import ClientDataset, partition_noniid
 from repro.data.synthetic import (
-    synthetic_mnist, synthetic_cifar, synthetic_shakespeare, synthetic_lm_corpus,
+    synthetic_cifar,
+    synthetic_lm_corpus,
+    synthetic_mnist,
+    synthetic_shakespeare,
 )
-from repro.data.partition import partition_noniid, ClientDataset
+
+__all__ = [
+    "ClientDataset",
+    "partition_noniid",
+    "synthetic_cifar",
+    "synthetic_lm_corpus",
+    "synthetic_mnist",
+    "synthetic_shakespeare",
+]

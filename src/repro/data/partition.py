@@ -1,7 +1,7 @@
 """Non-i.i.d. federated partitioning — Sec. VI-A-3 of the paper.
 
-Each UE is allocated a different local data size and holds exactly ``l`` of
-the label classes (``l`` = the non-iid level; smaller l = more heterogeneous).
+Each UE is allocated a different local data size and holds exactly ``n_labels`` of
+the label classes (the non-iid level; smaller = more heterogeneous).
 """
 from __future__ import annotations
 
@@ -83,11 +83,12 @@ def sample_triplet_many(clients: List[ClientDataset], b_in: int, b_o: int,
             "hessian": {k: v[:, s_in + s_o:] for k, v in stacked.items()}}
 
 
-def partition_noniid(data: Dict[str, np.ndarray], n_clients: int, l: int,
+def partition_noniid(data: Dict[str, np.ndarray], n_clients: int,
+                     n_labels: int,
                      *, n_classes: Optional[int] = None, seed: int = 0,
                      label_key: str = "y", test_frac: float = 0.2,
                      size_spread: float = 3.0) -> List[ClientDataset]:
-    """Partition ``data`` so each client holds exactly ``l`` classes.
+    """Partition ``data`` so each client holds exactly ``n_labels`` classes.
 
     Shards per class are split round-robin among the clients holding that
     class; client sizes vary by up to ``size_spread``× (paper: "each UE is
@@ -97,17 +98,17 @@ def partition_noniid(data: Dict[str, np.ndarray], n_clients: int, l: int,
     y = data[label_key]
     classes = np.unique(y) if n_classes is None else np.arange(n_classes)
     n_cls = len(classes)
-    l = max(1, min(l, n_cls))
+    n_labels = max(1, min(n_labels, n_cls))
 
-    # assign exactly l distinct classes per client; spread coverage by
+    # assign exactly n_labels distinct classes per client; spread coverage by
     # preferring the least-held classes (classes no client holds stay unused
-    # — with n·l < n_classes full coverage is impossible anyway)
+    # — with n·n_labels < n_classes full coverage is impossible anyway)
     held_count = {int(c): 0 for c in classes}
     client_classes = []
     for _ in range(n_clients):
         order = sorted(classes, key=lambda c: (held_count[int(c)],
                                                rng.random()))
-        mine = np.array(sorted(order[:l]))
+        mine = np.array(sorted(order[:n_labels]))
         for c in mine:
             held_count[int(c)] += 1
         client_classes.append(mine)
@@ -140,7 +141,7 @@ def partition_noniid(data: Dict[str, np.ndarray], n_clients: int, l: int,
         idx = np.array(sorted(client_idx[ci]), dtype=np.int64)
         if len(idx) < 4:                   # guarantee a usable shard — pad
             pool = np.where(np.isin(y, client_classes[ci]))[0]
-            extra = rng.choice(pool, size=8)    # ...from the SAME l classes
+            extra = rng.choice(pool, size=8)    # ...from the SAME n_labels classes
             idx = np.concatenate([idx, extra])
         rng.shuffle(idx)
         n_test = max(1, int(len(idx) * test_frac))

@@ -1,5 +1,19 @@
-from repro.fl.client import make_payload_fn, personalized_eval, global_eval
 from repro.fl.algorithms import ALGORITHMS, algorithm_name
+from repro.fl.client import global_eval, make_payload_fn, personalized_eval
+from repro.fl.driver import TopologyAdapter, run_event_loop
 from repro.fl.engine import SimulationEngine, bucket_size
-from repro.fl.driver import run_event_loop, TopologyAdapter
-from repro.fl.simulation import run_simulation, SimResult
+from repro.fl.simulation import SimResult, run_simulation
+
+__all__ = [
+    "ALGORITHMS",
+    "SimResult",
+    "SimulationEngine",
+    "TopologyAdapter",
+    "algorithm_name",
+    "bucket_size",
+    "global_eval",
+    "make_payload_fn",
+    "personalized_eval",
+    "run_event_loop",
+    "run_simulation",
+]

@@ -12,15 +12,14 @@ Eq. (8):  w ← w − β/A · Σ payloads.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.config import FLConfig
 from repro.core import perfed
-from repro.utils import tree_axpy, tree_sub, tree_scale
+from repro.utils import tree_scale, tree_sub
 
 PayloadFn = Callable[..., Any]    # (params, batches, rng) -> payload pytree
 

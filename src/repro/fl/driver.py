@@ -219,6 +219,9 @@ def make_cycle_duration_fn(adapter: TopologyAdapter, wl, z_bits: float,
             return cache["pw"][idx]
         cache["volatile"] = True
         cache["src"], cache["pw"] = None, None
+        # dists is the host sim clock's numpy distance matrix; asarray
+        # never touches a device array here
+        # simlint: disable-next=SIM202 -- host-side distance matrix
         return pathloss_pow(np.asarray(dists)[idx], kappa)
 
     counter_rng = getattr(wl, "rng", "legacy") == "counter"
@@ -249,6 +252,7 @@ def make_cycle_duration_fn(adapter: TopologyAdapter, wl, z_bits: float,
         # no-op context enter/exit on the batched call
         with obs.CURRENT.span("pricing"):
             adapter.pre_requeue(ues)
+            # simlint: disable-next=SIM202 -- ues is a host Python list
             idx = np.asarray(ues, dtype=np.int64)
             h = _fading_lanes(idx)
             tcmp = compute_times(cycles, d_i[idx], net.cpu_freq[idx])
@@ -368,6 +372,7 @@ def _event_loop(cfg: ExperimentConfig, model,
 
     # --- per-UE state -------------------------------------------------------
     held_params: List[Any] = [params0 for _ in range(n)]
+    # simlint: disable-next=SIM202 -- host list comprehension, setup only
     d_i = np.array([min(fl.inner_batch + fl.outer_batch + fl.hessian_batch,
                         len(c)) for c in clients])
     busy_time = np.zeros(n)
@@ -427,8 +432,11 @@ def _event_loop(cfg: ExperimentConfig, model,
 
     if do_eval:
         p0, g0, a0 = evaluate(params0, 0)
-        times.append(0.0); plosses.append(p0); glosses.append(g0)
-        accs.append(a0); rounds_at.append(0)
+        times.append(0.0)
+        plosses.append(p0)
+        glosses.append(g0)
+        accs.append(a0)
+        rounds_at.append(0)
 
     def restart_departed(items: List[Tuple[int, float]]) -> None:
         # Liveness for handed-over UEs: an upload that closed at the SOURCE
@@ -482,6 +490,7 @@ def _event_loop(cfg: ExperimentConfig, model,
                 redistributed.update(int(i) for i in dist)
                 for i in dist:
                     held_params[i] = result["params"]
+                # simlint: disable-next=SIM202 -- dist is a host int list
                 dist_arr = np.asarray(dist, dtype=np.int64)
                 epoch[dist_arr] += 1    # cancels any in-flight computation
                 cells_d = adapter.dispatch_cells(dist_arr)
@@ -494,8 +503,11 @@ def _event_loop(cfg: ExperimentConfig, model,
         k = result["round"]
         if do_eval and (k % eval_every == 0 or k == max_rounds):
             p, g, a = evaluate(result["params"], k)
-            times.append(t_now); plosses.append(p); glosses.append(g)
-            accs.append(a); rounds_at.append(k)
+            times.append(t_now)
+            plosses.append(p)
+            glosses.append(g)
+            accs.append(a)
+            rounds_at.append(k)
             cell = f" cell={result['cell']}" if "cell" in result else ""
             rep.progress(f"[{name or algorithm}-{mode}]{cell} round {k:4d} "
                          f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
@@ -689,8 +701,11 @@ def _event_loop(cfg: ExperimentConfig, model,
     return SimResult(
         telemetry=telemetry,
         name=name or f"{algorithm}-{mode}",
+        # simlint: disable-next=SIM202 -- final result assembly, host lists
         times=np.array(times), losses=np.array(plosses),
+        # simlint: disable-next=SIM202 -- final result assembly, host lists
         global_losses=np.array(glosses), accs=np.array(accs),
+        # simlint: disable-next=SIM202 -- final result assembly, host lists
         rounds=np.array(rounds_at), total_time=t_now,
         pi=proto.pi_matrix(), eta_target=adapter.eta,
         eta_realised=proto.realised_eta(),

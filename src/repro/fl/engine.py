@@ -199,9 +199,11 @@ class SimulationEngine:
             p, g, a = obs.CURRENT.device_call(
                 "engine.eval", self._eval_vfn, params, batches_b, rngs_b)
             self.eval_dispatches += 1
-            pl[idx] = np.asarray(p)
-            gl[idx] = np.asarray(g)
-            ac[idx] = np.asarray(a)
+            # eval results are consumed on host by design: this is the
+            # one deliberate sync point per eval sweep
+            pl[idx] = np.asarray(p)   # simlint: disable=SIM202 -- eval sync
+            gl[idx] = np.asarray(g)   # simlint: disable=SIM202 -- eval sync
+            ac[idx] = np.asarray(a)   # simlint: disable=SIM202 -- eval sync
         return pl, gl, ac
 
     # ------------------------------------------------------------------
@@ -348,6 +350,7 @@ class SimulationEngine:
         # aggregation sums rows in stacked order, so this keeps the batch
         # feed's summation order identical to the per-arrival path
         pos = np.empty(m, dtype=np.int64)
+        # simlint: disable-next=SIM202 -- order is a host int list
         pos[np.asarray(order, dtype=np.int64)] = np.arange(m)
         return jax.tree.map(
             lambda *xs: jnp.concatenate(xs, axis=0)[pos], *parts)
@@ -515,6 +518,7 @@ class SimulationEngine:
                 "engine.round", gfn, gparams[g], batches, seqs_b,
                 alphas_b, jnp.asarray(w), base_key))
             self.dispatches += 1
+        # simlint: disable-next=SIM202 -- weights is a host float list
         a_tot = max(float(np.asarray(weights, np.float32).sum()), 1.0)
         self.dispatches += 1                       # the combine call below
         obs.CURRENT.add("engine.dispatch.combine")
@@ -567,6 +571,7 @@ class SimulationEngine:
         alphas_b = jnp.asarray([float(alphas[i]) for i in lanes],
                                jnp.float32)
         w = np.zeros(bucket, np.float32)
+        # simlint: disable-next=SIM202 -- weights is a host float list
         w[:m] = np.asarray(weights, np.float32)
         obs.CURRENT.add("engine.dispatch.round")
         new_params, new_flat = obs.CURRENT.device_call(

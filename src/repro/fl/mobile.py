@@ -54,8 +54,8 @@ from repro.core.server import SemiSyncServer, ServerConfig
 from repro.data.partition import ClientDataset
 from repro.fl.driver import SimResult, TopologyAdapter, run_event_loop
 from repro.fl.engine import SimulationEngine
-from repro.obs import trace as obs
 from repro.mobility.multicell import MultiCellNetwork
+from repro.obs import trace as obs
 from repro.wireless.channel import noise_w_per_hz, pathloss_pow
 from repro.wireless.timing import compute_times
 

@@ -83,15 +83,15 @@ def flash_attention_bhld(q: jax.Array, k: jax.Array, v: jax.Array, *,
     ``interpret=True`` runs the kernel body in Python on CPU (this container);
     on a real TPU pass ``interpret=False``.
     """
-    b, hq, l, d = q.shape
+    b, hq, sl, d = q.shape
     hkv = k.shape[1]
     assert hq % hkv == 0
     group = hq // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
 
-    l_pad = -(-l // max(block_q, block_k)) * max(block_q, block_k)
-    if l_pad != l:
-        pad = ((0, 0), (0, 0), (0, l_pad - l), (0, 0))
+    l_pad = -(-sl // max(block_q, block_k)) * max(block_q, block_k)
+    if l_pad != sl:
+        pad = ((0, 0), (0, 0), (0, l_pad - sl), (0, 0))
         q = jnp.pad(q, pad)
         k = jnp.pad(k, pad)
         v = jnp.pad(v, pad)
@@ -99,7 +99,7 @@ def flash_attention_bhld(q: jax.Array, k: jax.Array, v: jax.Array, *,
     nk = l_pad // block_k
 
     kernel = functools.partial(
-        _flash_kernel, scale=scale, causal=causal, window=window, seq_len=l,
+        _flash_kernel, scale=scale, causal=causal, window=window, seq_len=sl,
         block_q=block_q, block_k=block_k, num_k_blocks=nk)
 
     out = pl.pallas_call(
@@ -122,4 +122,4 @@ def flash_attention_bhld(q: jax.Array, k: jax.Array, v: jax.Array, *,
         ],
         interpret=interpret,
     )(q, k, v)
-    return out[:, :, :l, :]
+    return out[:, :, :sl, :]

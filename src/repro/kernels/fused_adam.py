@@ -43,7 +43,8 @@ def fused_adam_flat(p: jax.Array, m: jax.Array, v: jax.Array, g: jax.Array,
     n = p.shape[0]
     n_pad = -(-n // block) * block
     if n_pad != n:
-        padder = lambda x: jnp.pad(x, (0, n_pad - n))
+        def padder(x):
+            return jnp.pad(x, (0, n_pad - n))
         p, m, v, g = padder(p), padder(m), padder(v), padder(g)
     tf = jnp.asarray(t, jnp.float32)
     scal = jnp.stack([jnp.asarray(lr, jnp.float32),

@@ -7,7 +7,7 @@ CPU-container default; flip to False on real TPUs.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +17,19 @@ from repro.kernels.flash_attention import flash_attention_bhld
 from repro.kernels.fused_adam import fused_adam_flat
 from repro.kernels.ssd_scan import ssd_chunk_pallas
 from repro.kernels.stale_aggregate import stale_aggregate_flat
+
+# ``ref`` / ``stale_aggregate_flat`` / the tree aggregators below are
+# deliberate ops.* passthroughs (historical public entry points).
+__all__ = [
+    "INTERPRET",
+    "flash_attention",
+    "fused_adam_tree",
+    "masked_aggregate_tree",
+    "ref",
+    "ssd_chunked",
+    "stale_aggregate_flat",
+    "stale_aggregate_tree",
+]
 
 INTERPRET = True   # CPU container; set False on TPU
 
@@ -41,10 +54,10 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
 
     x [B,L,H,P], dt [B,L,H], a [H], b/c [B,L,N] → (y [B,L,H,P], final_state).
     """
-    bs, l, h, p = x.shape
+    bs, sl, h, p = x.shape
     n = b.shape[-1]
-    assert l % chunk == 0
-    nc = l // chunk
+    assert sl % chunk == 0
+    nc = sl // chunk
     xr = x.reshape(bs, nc, chunk, h, p)
     dtr = dt.reshape(bs, nc, chunk, h)
     br = b.reshape(bs, nc, chunk, n)
@@ -67,7 +80,7 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
     s_prevs = jnp.moveaxis(s_prevs, 0, 1)                    # [B,NC,H,P,N]
     y_inter = jnp.einsum("bzin,bzhi,bzhpn->bzihp",
                          cr.astype(jnp.float32), in_decay, s_prevs)
-    y = (y_intra + y_inter).reshape(bs, l, h, p)
+    y = (y_intra + y_inter).reshape(bs, sl, h, p)
     return y.astype(x.dtype), s_final.astype(x.dtype)
 
 
@@ -96,5 +109,7 @@ def fused_adam_tree(params, m, v, grads, *, lr, t, b1=0.9, b2=0.95, eps=1e-8,
 # Pytree Eq.-(8) update now lives in kernels/stale_aggregate.py as the
 # unified aggregation API (single concat buffer + cached treedef) — this
 # re-export keeps the historical ops.* entry point working.
-from repro.kernels.stale_aggregate import (masked_aggregate_tree,  # noqa: E402,F401
-                                           stale_aggregate_tree)
+from repro.kernels.stale_aggregate import (  # noqa: E402
+    masked_aggregate_tree,
+    stale_aggregate_tree,
+)

@@ -12,7 +12,7 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int = 0,
                   scale: Optional[float] = None) -> jax.Array:
     """Materialised attention. q [B,Hq,L,D], k/v [B,Hkv,L,D] → [B,Hq,L,D]."""
-    b, hq, l, d = q.shape
+    b, hq, sl, d = q.shape
     hkv = k.shape[1]
     group = hq // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
@@ -20,9 +20,9 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     v = jnp.repeat(v, group, axis=1)
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
-    q_pos = jnp.arange(l)[:, None]
-    k_pos = jnp.arange(l)[None, :]
-    mask = jnp.ones((l, l), bool)
+    q_pos = jnp.arange(sl)[:, None]
+    k_pos = jnp.arange(sl)[None, :]
+    mask = jnp.ones((sl, sl), bool)
     if causal:
         mask &= k_pos <= q_pos
     if window > 0:

@@ -11,13 +11,11 @@ Per (batch, chunk) program, VMEM blocks:
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 
 def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref,

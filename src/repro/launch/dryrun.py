@@ -7,7 +7,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse        # noqa: E402
 import json            # noqa: E402
-import re              # noqa: E402
 import sys             # noqa: E402
 import time            # noqa: E402
 import traceback       # noqa: E402
@@ -16,11 +15,11 @@ from typing import Any, Dict, Optional  # noqa: E402
 import jax             # noqa: E402
 
 from repro import sharding           # noqa: E402
-from repro.configs import ALIASES, ARCH_IDS, SHAPES, get_config, get_shape  # noqa: E402
-from repro.launch.mesh import make_production_mesh                          # noqa: E402
-from repro.launch.specs import arch_rules, build_case                       # noqa: E402
+from repro.configs import ARCH_IDS, SHAPES, get_config, get_shape  # noqa: E402
 from repro.launch.hlo_analysis import analyze_hlo                           # noqa: E402
+from repro.launch.mesh import make_production_mesh                          # noqa: E402
 from repro.launch.roofline import collective_bytes, roofline_report         # noqa: E402
+from repro.launch.specs import arch_rules, build_case                       # noqa: E402
 
 DEFAULT_OUT = "artifacts/dryrun"
 
@@ -164,8 +163,9 @@ def main(argv=None):
                 rec["tag"] = args.tag
                 results.append(rec)
                 status = rec["status"]
+                peak_gib = rec.get("memory", {}).get("peak_bytes", 0) / 2 ** 30
                 extra = (f"flops={rec.get('flops', 0):.3e} "
-                         f"peak={rec.get('memory', {}).get('peak_bytes', 0)/2**30:.2f}GiB"
+                         f"peak={peak_gib:.2f}GiB"
                          if status == "ok" else rec.get("error", ""))
                 print(f"[{status:4s}] {arch:22s} {shape_name:12s} "
                       f"{'multi' if mp else 'single':6s} "

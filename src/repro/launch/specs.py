@@ -22,7 +22,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import sharding
-from repro.config import (ExperimentConfig, FLConfig, MeshConfig, ModelConfig,
+from repro.config import (ExperimentConfig, FLConfig, ModelConfig,
                           ShapeConfig, TrainConfig)
 from repro.core import semi_sync
 from repro.models import build_model
@@ -233,7 +233,8 @@ def build_case(model_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
                semi_sync_cohorts: Optional[int] = None,
                perfed_step: bool = True,
                cache_policy: str = "auto",
-               rules: Optional[sharding.AxisRules] = None) -> LowerCase:
+               rules: Optional[sharding.AxisRules] = None,
+               seed: int = 0) -> LowerCase:
     """Assemble one (arch × shape × mesh) lowering case."""
     fl = fl or FLConfig()
     train = train or TrainConfig(seq_len=shape.seq_len,
@@ -244,7 +245,7 @@ def build_case(model_cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
     model = build_model(cfg, moe_impl=moe_impl)
     rules = rules or arch_rules(cfg, mesh)
 
-    rng = jax.random.PRNGKey(0)
+    rng = jax.random.PRNGKey(seed)
     with sharding.use_mesh(None):   # abstract init never needs the mesh
         params_abs = jax.eval_shape(model.init, rng)
     pspecs = sharding.param_specs(params_abs, mesh, rules)

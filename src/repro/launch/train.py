@@ -18,12 +18,10 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 import time
 from dataclasses import replace
 
-import numpy as np
 
 
 def main(argv=None):
@@ -73,11 +71,11 @@ def run_fl(cfg, args):
         clients = sequence_clients(role_data, cfg.fl.n_ues, seed=args.seed)
     elif name.startswith("lenet5"):
         data = synthetic_cifar(n=4000)
-        clients = partition_noniid(data, cfg.fl.n_ues, l=args.noniid_l,
+        clients = partition_noniid(data, cfg.fl.n_ues, n_labels=args.noniid_l,
                                    seed=args.seed)
     else:
         data = synthetic_mnist(n=4000)
-        clients = partition_noniid(data, cfg.fl.n_ues, l=args.noniid_l,
+        clients = partition_noniid(data, cfg.fl.n_ues, n_labels=args.noniid_l,
                                    seed=args.seed)
 
     res = run_simulation(cfg, model, clients, algorithm=args.algo,
@@ -102,7 +100,6 @@ def run_fl(cfg, args):
 def run_scale(cfg, args):
     import jax
     import jax.numpy as jnp
-    from repro import sharding
     from repro.checkpoint import save_checkpoint
     from repro.core import semi_sync
     from repro.models import build_model

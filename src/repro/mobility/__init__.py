@@ -1,4 +1,20 @@
-from repro.mobility.models import (Area, GaussMarkov, MobilityModel,
-                                   RandomWaypoint, StaticMobility,
-                                   get_mobility)
+from repro.mobility.models import (
+    Area,
+    GaussMarkov,
+    MobilityModel,
+    RandomWaypoint,
+    StaticMobility,
+    get_mobility,
+)
 from repro.mobility.multicell import MultiCellNetwork, cell_layout
+
+__all__ = [
+    "Area",
+    "GaussMarkov",
+    "MobilityModel",
+    "MultiCellNetwork",
+    "RandomWaypoint",
+    "StaticMobility",
+    "cell_layout",
+    "get_mobility",
+]

@@ -1,1 +1,3 @@
-from repro.models.registry import build_model, MODEL_FAMILIES
+from repro.models.registry import MODEL_FAMILIES, build_model
+
+__all__ = ["MODEL_FAMILIES", "build_model"]

@@ -8,7 +8,7 @@ is the sum of per-codebook embeddings; output is K parallel LM heads.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -12,6 +12,7 @@ Conventions
 """
 from __future__ import annotations
 
+import inspect as _inspect
 import math
 from typing import Any, Dict, Optional, Tuple
 
@@ -19,14 +20,12 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.config import ModelConfig
 from repro import sharding
+from repro.config import ModelConfig
 
 # jax ≥ 0.5 exposes jax.shard_map; 0.4.x has it under jax.experimental.
 # The replication-check kwarg was renamed check_rep → check_vma, not in
 # lockstep with the move, so probe the signature rather than the version.
-import inspect as _inspect
-
 if hasattr(jax, "shard_map"):
     _shard_map = jax.shard_map
 else:
@@ -45,7 +44,8 @@ Params = Dict[str, Any]
 
 def dense_init(key, in_dim: int, out_dim: int, dtype, scale: Optional[float] = None):
     scale = scale if scale is not None else 1.0 / math.sqrt(in_dim)
-    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+    w = jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale
+    return w.astype(dtype)
 
 
 def _dt(cfg: ModelConfig):
@@ -195,7 +195,8 @@ def attention_init(key, cfg: ModelConfig, *, cross: bool = False) -> Params:
         "w_k": dense_init(kk, cfg.d_model, cfg.num_kv_heads * hd, dt),
         "w_v": dense_init(kv, cfg.d_model, cfg.num_kv_heads * hd, dt),
         "w_o": dense_init(ko, cfg.num_heads * hd, cfg.d_model, dt,
-                          scale=1.0 / math.sqrt(cfg.num_heads * hd * 2 * cfg.num_layers)),
+                          scale=1.0 / math.sqrt(
+                              cfg.num_heads * hd * 2 * cfg.num_layers)),
     }
 
 
@@ -301,7 +302,8 @@ def mla_init(key, cfg: ModelConfig) -> Params:
         "w_uk":  dense_init(ks[2], m.kv_lora_rank, h * m.qk_nope_head_dim, dt),
         "w_uv":  dense_init(ks[3], m.kv_lora_rank, h * m.v_head_dim, dt),
         "w_o":   dense_init(ks[4], h * m.v_head_dim, cfg.d_model, dt,
-                            scale=1.0 / math.sqrt(h * m.v_head_dim * 2 * cfg.num_layers)),
+                            scale=1.0 / math.sqrt(
+                                h * m.v_head_dim * 2 * cfg.num_layers)),
         "norm_ckv": rmsnorm_init(m.kv_lora_rank, dt),
     }
     if m.q_lora_rank:
@@ -499,8 +501,8 @@ def moe_apply_gather(params: Params, x: jax.Array, cfg: ModelConfig
                      ) -> Tuple[jax.Array, jax.Array]:
     """Capacity-bucketed sort/gather MoE (single-host / GSPMD-auto path)."""
     e = cfg.moe
-    b, l, d = x.shape
-    t = b * l
+    b, sl, d = x.shape
+    t = b * sl
     k = e.experts_per_token
     xf = x.reshape(t, d)
     probs, idx, aux = _route(params, xf.astype(jnp.float32), e)
@@ -531,7 +533,7 @@ def moe_apply_gather(params: Params, x: jax.Array, cfg: ModelConfig
 
     if e.num_shared_experts:
         out = out + _shared_expert(params, xf, cfg)
-    return out.reshape(b, l, d), aux
+    return out.reshape(b, sl, d), aux
 
 
 def _shared_expert(params: Params, xf: jax.Array, cfg: ModelConfig) -> jax.Array:
@@ -549,8 +551,8 @@ def moe_apply_ep(params: Params, x: jax.Array, cfg: ModelConfig
     if mesh is None or "model" not in mesh.axis_names:
         return moe_apply_gather(params, x, cfg)
     e = cfg.moe
-    b, l, d = x.shape
-    t_global = b * l
+    b, sl, d = x.shape
+    t_global = b * sl
     k = e.experts_per_token
     ep = mesh.shape["model"]
 
@@ -588,8 +590,8 @@ def moe_apply_ep(params: Params, x: jax.Array, cfg: ModelConfig
 
     batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     x_spec = P(batch_axes, None, None)
-    probs = probs.reshape(b, l, k_eff)
-    idx = idx.reshape(b, l, k_eff)
+    probs = probs.reshape(b, sl, k_eff)
+    idx = idx.reshape(b, sl, k_eff)
 
     n_batch_shards = 1
     for a in batch_axes:
@@ -640,7 +642,7 @@ def moe_apply_ep(params: Params, x: jax.Array, cfg: ModelConfig
 
     if e.num_shared_experts:
         xf = x.reshape(t_global, d)
-        out = out + _shared_expert(params, xf, cfg).reshape(b, l, d)
+        out = out + _shared_expert(params, xf, cfg).reshape(b, sl, d)
     return out, aux
 
 

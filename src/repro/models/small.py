@@ -10,7 +10,7 @@ the same (init/loss/predict) protocol as the large LM families.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -137,7 +137,7 @@ class CharLSTM:
         }
 
     def _run(self, params, tokens):
-        b, l = tokens.shape
+        b, _ = tokens.shape
         x = params["embed"][tokens]                                  # [B,L,E]
         h0 = jnp.zeros((b, self.hidden))
         c0 = jnp.zeros((b, self.hidden))

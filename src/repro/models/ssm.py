@@ -50,19 +50,19 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
     c  [B, L, N]      output projections
     Returns (y [B, L, H, P], final_state [B, H, P, N]).
     """
-    bs, l, h, p = x.shape
+    bs, sl, h, p = x.shape
     n = b.shape[-1]
-    l_orig = l
-    if l % chunk:
+    l_orig = sl
+    if sl % chunk:
         # zero-pad to a chunk multiple: dt=0 at pads ⇒ decay 1, update 0 —
         # the state is provably unaffected by padding positions
-        pad = chunk - l % chunk
+        pad = chunk - sl % chunk
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
         c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
-        l = l + pad
-    nc = l // chunk
+        sl = sl + pad
+    nc = sl // chunk
 
     xr = x.reshape(bs, nc, chunk, h, p)
     dtr = dt.reshape(bs, nc, chunk, h)
@@ -99,11 +99,11 @@ def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
     s_prevs = jnp.moveaxis(s_prevs, 0, 1)                            # [B,NC,H,P,N]
 
     # 4) contribution of previous-chunk state to each position
-    in_decay = jnp.exp(cum)                                          # decay from chunk start
+    in_decay = jnp.exp(cum)                              # decay from chunk start
     y_inter = jnp.einsum("bzin,bzhi,bzhpn->bzihp", cr, in_decay,
                          s_prevs.astype(cr.dtype))
 
-    y = (y_intra + y_inter).reshape(bs, l, h, p)[:, :l_orig]
+    y = (y_intra + y_inter).reshape(bs, sl, h, p)[:, :l_orig]
     return y.astype(x.dtype), s_final.astype(x.dtype)
 
 

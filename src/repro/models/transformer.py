@@ -7,7 +7,6 @@ over *groups* (N self layers + 1 cross layer).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

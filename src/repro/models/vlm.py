@@ -7,7 +7,7 @@ inserted every ``cfg.cross_attn_every`` self-attention layers.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -1,4 +1,20 @@
 from repro.optim.optimizers import (
-    Optimizer, sgd, momentum, adam, make_optimizer, clip_by_global_norm,
+    Optimizer,
+    adam,
+    clip_by_global_norm,
+    make_optimizer,
+    momentum,
+    sgd,
 )
-from repro.optim.schedule import warmup_cosine, constant
+from repro.optim.schedule import constant, warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "adam",
+    "clip_by_global_norm",
+    "constant",
+    "make_optimizer",
+    "momentum",
+    "sgd",
+    "warmup_cosine",
+]

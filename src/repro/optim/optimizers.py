@@ -6,13 +6,12 @@ time so schedules stay outside the optimizer state.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Any, Callable, NamedTuple, Optional, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.utils import tree_axpy, tree_norm
+from repro.utils import tree_norm
 
 
 class Optimizer(NamedTuple):
@@ -63,7 +62,8 @@ def momentum(mu: float = 0.9, nesterov: bool = False) -> Optimizer:
 def adam(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
          weight_decay: float = 0.0, state_dtype=jnp.float32) -> Optimizer:
     def init(params):
-        zeros = lambda p: jnp.zeros_like(p, state_dtype)
+        def zeros(p):
+            return jnp.zeros_like(p, state_dtype)
         return {"m": jax.tree.map(zeros, params),
                 "v": jax.tree.map(zeros, params),
                 "t": jnp.zeros((), jnp.int32)}

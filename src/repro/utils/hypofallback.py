@@ -18,7 +18,7 @@ Usage (in tests)::
 from __future__ import annotations
 
 import zlib
-from typing import Any, Callable, List, Sequence
+from typing import Any, Callable, Sequence
 
 import numpy as np
 

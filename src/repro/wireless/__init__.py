@@ -1,2 +1,10 @@
 from repro.wireless.channel import EdgeNetwork, sample_channels
-from repro.wireless.timing import compute_time, upload_time, round_time
+from repro.wireless.timing import compute_time, round_time, upload_time
+
+__all__ = [
+    "EdgeNetwork",
+    "compute_time",
+    "round_time",
+    "sample_channels",
+    "upload_time",
+]

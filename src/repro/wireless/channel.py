@@ -6,7 +6,7 @@ with Rayleigh small-scale fading h resampled per communication round.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import numpy as np

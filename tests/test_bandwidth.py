@@ -1,6 +1,5 @@
 """Theorems 2–4: Lambert-W, rate inversion, equal-finish optimality."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:                       # clean container (tier-1)

@@ -1,5 +1,4 @@
 """Theorem 1 / Corollary 1 analytic expressions."""
-import math
 
 import pytest
 

@@ -23,8 +23,8 @@ from repro.config import (ExperimentConfig, FLConfig, MobilityConfig,
 from repro.configs import get_config
 from repro.data import partition_noniid, synthetic_mnist
 from repro.fl.simulation import run_simulation
-from repro.models import build_model
 from repro.mobility.multicell import MultiCellNetwork
+from repro.models import build_model
 from repro.wireless.channel import (EdgeNetwork, counter_fading_seed,
                                     counter_rayleigh, validate_rng_mode)
 
@@ -42,7 +42,7 @@ def _cfg(n=8, a=3, s=3, rng="legacy", **fl_kw):
 
 
 def _clients(n=8, seed=0):
-    return partition_noniid(_DATA, n, l=4, seed=seed)
+    return partition_noniid(_DATA, n, n_labels=4, seed=seed)
 
 
 # ---------------------------------------------------------------------------
@@ -189,7 +189,7 @@ def test_batch_feed_matches_sequential_static_mixed_signatures():
     cfg = _cfg(n=6, a=2, s=2)
 
     def tiny():
-        return partition_noniid(synthetic_mnist(n=60, seed=3), 6, l=3, seed=1)
+        return partition_noniid(synthetic_mnist(n=60, seed=3), 6, n_labels=3, seed=1)
 
     sigs = {c.triplet_sizes(8, 8, 8) for c in tiny()}
     assert len(sigs) > 1, f"expected mixed signatures, got {sigs}"

@@ -13,13 +13,13 @@ from repro.data.partition import sample_triplet_many, sequence_clients
 
 @given(st.integers(2, 20), st.integers(1, 10), st.integers(0, 5))
 @settings(max_examples=20, deadline=None)
-def test_clients_hold_at_most_l_labels(n_clients, l, seed):
+def test_clients_hold_at_most_l_labels(n_clients, n_labels, seed):
     data = synthetic_mnist(n=800, seed=seed)
-    clients = partition_noniid(data, n_clients, l, seed=seed)
+    clients = partition_noniid(data, n_clients, n_labels, seed=seed)
     assert len(clients) == n_clients
     for c in clients:
         # ≤ l classes (a tiny shard may be padded with random extras)
-        assert len(c.labels_held) <= max(l, 1) + 2
+        assert len(c.labels_held) <= max(n_labels, 1) + 2
         assert len(c) >= 1
 
 

@@ -52,7 +52,6 @@ def test_prefill_then_decode_matches_full_forward(arch, rng):
 def test_ring_buffer_matches_windowed_attention(rng):
     """Sliding-window decode with a ring cache == full cache + window mask."""
     cfg = get_config("yi_6b").reduced()
-    import dataclasses
     model = build_model(cfg)
     params = model.init(rng)
     b, l_pre, w = 1, 40, 16

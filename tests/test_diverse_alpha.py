@@ -1,6 +1,5 @@
 """Paper §II-B generalisation: per-UE inner learning rates α_i ≥ 0."""
 import numpy as np
-import pytest
 
 from repro.config import ExperimentConfig, FLConfig
 from repro.configs import get_config
@@ -16,7 +15,7 @@ def test_diverse_alpha_converges():
                     alpha=0.03, alpha_spread=1.0, beta=0.07,
                     inner_batch=16, outer_batch=16, hessian_batch=16))
     model = build_model(cfg.model)
-    clients = partition_noniid(synthetic_mnist(n=1600, seed=11), 8, l=4,
+    clients = partition_noniid(synthetic_mnist(n=1600, seed=11), 8, n_labels=4,
                                seed=11)
     res = run_simulation(cfg, model, clients, algorithm="perfed", mode="semi",
                          max_rounds=15, eval_every=15, seed=11)
@@ -34,8 +33,9 @@ def test_payload_fn_traced_alpha_no_recompile():
     fn = make_payload_fn(model, cfg.fl, "perfed")
     rng = jax.random.PRNGKey(0)
     params = model.init(rng)
-    batch = {"x": jax.random.normal(rng, (8, 28, 28)),
-             "y": jax.random.randint(rng, (8,), 0, 10)}
+    kx, ky = jax.random.split(jax.random.fold_in(rng, 1))
+    batch = {"x": jax.random.normal(kx, (8, 28, 28)),
+             "y": jax.random.randint(ky, (8,), 0, 10)}
     batches = {"inner": batch, "outer": batch, "hessian": batch}
     g1 = fn(params, batches, rng, 0.01)
     g2 = fn(params, batches, rng, 0.05)

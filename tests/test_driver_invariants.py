@@ -115,7 +115,7 @@ def _run(seed: int, speed: float, n_cells: int, mix: str,
             # live on the step_s grid, so a sub-second tick keeps the UEs
             # moving (and handovers exercised) within the run
             step_s=0.1))
-    clients = partition_noniid(_DATA, N_UES, l=4, seed=seed)
+    clients = partition_noniid(_DATA, N_UES, n_labels=4, seed=seed)
     adapter = InstrumentedAdapter(cfg, N_UES, seed=seed,
                                   bandwidth_policy=bandwidth_policy,
                                   mode="semi")

@@ -29,7 +29,7 @@ def _cfg(n=8, a=3, s=3):
 def _clients(n=8, seed=0):
     # fresh per run: each ClientDataset owns a stateful np generator, so
     # equivalence runs must not share sampler state
-    return partition_noniid(_DATA, n, l=4, seed=seed)
+    return partition_noniid(_DATA, n, n_labels=4, seed=seed)
 
 
 # ---------------------------------------------------------------------------

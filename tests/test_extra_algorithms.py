@@ -21,16 +21,20 @@ def test_staleness_discount_weights_fresh_higher():
                        beta=1.0, staleness_discount=0.5)
     srv = SemiSyncServer(_payload(0.0), cfg)
     # advance two rounds via UE0/UE1 so UE2 (never refreshed) has τ=2
-    srv.on_arrival(0, _payload(0.0)); srv.on_arrival(1, _payload(0.0))
-    srv.on_arrival(0, _payload(0.0)); srv.on_arrival(1, _payload(0.0))
+    srv.on_arrival(0, _payload(0.0))
+    srv.on_arrival(1, _payload(0.0))
+    srv.on_arrival(0, _payload(0.0))
+    srv.on_arrival(1, _payload(0.0))
     w_before = float(srv.params["w"][0])
     srv.on_arrival(0, _payload(1.0))        # fresh, τ=0, weight 1
     res = srv.on_arrival(2, _payload(1.0))  # stale, τ=2, weight 0.25
     # weighted mean = (1·1 + 0.25·1)/1.25 = 1 → same as unweighted here for
     # identical payloads; use DIFFERENT payloads to discriminate:
     srv2 = SemiSyncServer(_payload(0.0), cfg)
-    srv2.on_arrival(0, _payload(0.0)); srv2.on_arrival(1, _payload(0.0))
-    srv2.on_arrival(0, _payload(0.0)); srv2.on_arrival(1, _payload(0.0))
+    srv2.on_arrival(0, _payload(0.0))
+    srv2.on_arrival(1, _payload(0.0))
+    srv2.on_arrival(0, _payload(0.0))
+    srv2.on_arrival(1, _payload(0.0))
     base = float(srv2.params["w"][0])
     srv2.on_arrival(0, _payload(4.0))       # fresh says +4
     r2 = srv2.on_arrival(2, _payload(0.0))  # stale says 0
@@ -42,8 +46,10 @@ def test_staleness_discount_weights_fresh_higher():
     cfg1 = ServerConfig(n_ues=3, participants_per_round=2, staleness_bound=10,
                         beta=1.0, staleness_discount=1.0)
     srv3 = SemiSyncServer(_payload(0.0), cfg1)
-    srv3.on_arrival(0, _payload(0.0)); srv3.on_arrival(1, _payload(0.0))
-    srv3.on_arrival(0, _payload(0.0)); srv3.on_arrival(1, _payload(0.0))
+    srv3.on_arrival(0, _payload(0.0))
+    srv3.on_arrival(1, _payload(0.0))
+    srv3.on_arrival(0, _payload(0.0))
+    srv3.on_arrival(1, _payload(0.0))
     base3 = float(srv3.params["w"][0])
     srv3.on_arrival(0, _payload(4.0))
     r3 = srv3.on_arrival(2, _payload(0.0))
@@ -58,7 +64,7 @@ def fl_setup():
                     alpha=0.03, beta=0.07, inner_batch=16, outer_batch=16,
                     hessian_batch=16))
     model = build_model(cfg.model)
-    clients = partition_noniid(synthetic_mnist(n=1600, seed=13), 8, l=4,
+    clients = partition_noniid(synthetic_mnist(n=1600, seed=13), 8, n_labels=4,
                                seed=13)
     return cfg, model, clients
 

@@ -18,7 +18,7 @@ def setup():
                     outer_batch=16, hessian_batch=16))
     model = build_model(cfg.model)
     data = synthetic_mnist(n=2500, seed=3)
-    clients = partition_noniid(data, 10, l=4, seed=3)
+    clients = partition_noniid(data, 10, n_labels=4, seed=3)
     return cfg, model, clients
 
 

@@ -4,12 +4,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref
+from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_bhld
 from repro.kernels.fused_adam import fused_adam_flat
 from repro.kernels.ssd_scan import ssd_chunk_pallas
 from repro.kernels.stale_aggregate import stale_aggregate_flat
-from repro.kernels import ops
 
 
 # ---------------------------------------------------------------- flash ----
@@ -23,15 +22,16 @@ FLASH_SHAPES = [
 ]
 
 
-@pytest.mark.parametrize("b,hq,hkv,l,d,blk", FLASH_SHAPES)
+@pytest.mark.parametrize("b,hq,hkv,sl,d,blk", FLASH_SHAPES)
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize("window", [0, 24])
-def test_flash_attention_matches_ref(b, hq, hkv, l, d, blk, causal, window,
+def test_flash_attention_matches_ref(b, hq, hkv, sl, d, blk, causal,
+                                     window,
                                      rng):
     ks = jax.random.split(rng, 3)
-    q = jax.random.normal(ks[0], (b, hq, l, d), jnp.float32)
-    k = jax.random.normal(ks[1], (b, hkv, l, d), jnp.float32)
-    v = jax.random.normal(ks[2], (b, hkv, l, d), jnp.float32)
+    q = jax.random.normal(ks[0], (b, hq, sl, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, hkv, sl, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, hkv, sl, d), jnp.float32)
     got = flash_attention_bhld(q, k, v, causal=causal, window=window,
                                block_q=blk, block_k=blk)
     want = ref.attention_ref(q, k, v, causal=causal, window=window)
@@ -98,13 +98,13 @@ def test_ssd_chunk_kernel_matches_naive_recurrence(b, nc, q, h, p, n, rng):
 def test_ssd_ops_matches_model_implementation(rng):
     """ops.ssd_chunked (Pallas) ≡ models.ssm.ssd_chunked (pure jnp)."""
     from repro.models.ssm import ssd_chunked as ssd_jnp
-    bs, l, h, p, n = 2, 128, 3, 8, 16
+    bs, sl, h, p, n = 2, 128, 3, 8, 16
     ks = jax.random.split(rng, 5)
-    x = jax.random.normal(ks[0], (bs, l, h, p))
-    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, l, h)))
+    x = jax.random.normal(ks[0], (bs, sl, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bs, sl, h)))
     a = -jnp.exp(jax.random.normal(ks[2], (h,)))
-    bm = jax.random.normal(ks[3], (bs, l, n))
-    cm = jax.random.normal(ks[4], (bs, l, n))
+    bm = jax.random.normal(ks[3], (bs, sl, n))
+    cm = jax.random.normal(ks[4], (bs, sl, n))
     y1, s1 = ssd_jnp(x, dt, a, bm, cm, 32)
     y2, s2 = ops.ssd_chunked(x, dt, a, bm, cm, 32)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
@@ -130,9 +130,11 @@ def test_fused_adam_matches_ref(n, t, rng):
 
 
 def test_fused_adam_bf16_params(rng):
-    p = jax.random.normal(rng, (512,)).astype(jnp.bfloat16)
-    m = jnp.zeros(512); v = jnp.zeros(512)
-    g = jax.random.normal(rng, (512,))
+    kp, kg = jax.random.split(rng)
+    p = jax.random.normal(kp, (512,)).astype(jnp.bfloat16)
+    m = jnp.zeros(512)
+    v = jnp.zeros(512)
+    g = jax.random.normal(kg, (512,))
     np_, _, _ = fused_adam_flat(p, m, v, g, lr=1e-2, t=1)
     assert np_.dtype == jnp.bfloat16
 
@@ -140,8 +142,9 @@ def test_fused_adam_bf16_params(rng):
 def test_fused_adam_tree_matches_optimizer(rng):
     """kernel pytree wrapper ≡ repro.optim.adam on a small param tree."""
     from repro.optim import adam
-    params = {"a": jax.random.normal(rng, (64, 8)),
-              "b": {"c": jax.random.normal(rng, (100,))}}
+    ka, kc = jax.random.split(rng)
+    params = {"a": jax.random.normal(ka, (64, 8)),
+              "b": {"c": jax.random.normal(kc, (100,))}}
     grads = jax.tree.map(lambda x: jnp.ones_like(x) * 0.1, params)
     opt = adam(b1=0.9, b2=0.95, eps=1e-8)
     st = opt.init(params)

@@ -359,7 +359,7 @@ def _cfg(n=8, a=3, s=3, **fl_kw):
 
 
 def _clients(n=8, seed=0):
-    return partition_noniid(_DATA, n, l=4, seed=seed)
+    return partition_noniid(_DATA, n, n_labels=4, seed=seed)
 
 
 def test_degenerate_mobile_is_bitwise_identical_to_static():

@@ -14,11 +14,11 @@ ASSIGNED = [a for a in ARCH_IDS if a not in ("mnist_dnn", "lenet5",
                                              "char_lstm")]
 
 
-def _batch(cfg, rng, b=2, l=64):
+def _batch(cfg, rng, b=2, sl=64):
     if cfg.family == "audio":
-        shape = (b, l, cfg.num_audio_codebooks)
+        shape = (b, sl, cfg.num_audio_codebooks)
     else:
-        shape = (b, l)
+        shape = (b, sl)
     toks = jax.random.randint(rng, shape, 0, cfg.vocab_size)
     return {"tokens": toks, "targets": toks}
 
@@ -30,11 +30,12 @@ def test_reduced_forward_and_shapes(arch, rng):
     params = model.init(rng)
     batch = _batch(cfg, rng)
     logits = model.predict(params, batch)
-    b, l = batch["tokens"].shape[0], batch["tokens"].shape[1]
+    b, sl = batch["tokens"].shape[0], batch["tokens"].shape[1]
     if cfg.family == "audio":
-        assert logits.shape == (b, l, cfg.num_audio_codebooks, cfg.vocab_size)
+        assert logits.shape == (b, sl, cfg.num_audio_codebooks,
+                                cfg.vocab_size)
     else:
-        assert logits.shape == (b, l, cfg.vocab_size)
+        assert logits.shape == (b, sl, cfg.vocab_size)
     assert bool(jnp.isfinite(logits).all())
 
 
@@ -65,13 +66,14 @@ def test_paper_models(arch, rng):
     cfg = get_config(arch)
     model = build_model(cfg)
     params = model.init(rng)
+    k1, k2 = jax.random.split(jax.random.fold_in(rng, 1))
     if arch == "char_lstm":
-        batch = {"tokens": jax.random.randint(rng, (2, 16), 0, cfg.vocab_size),
-                 "targets": jax.random.randint(rng, (2, 16), 0, cfg.vocab_size)}
+        batch = {"tokens": jax.random.randint(k1, (2, 16), 0, cfg.vocab_size),
+                 "targets": jax.random.randint(k2, (2, 16), 0, cfg.vocab_size)}
     else:
         hw = 28 if arch == "mnist_dnn" else 32
         shape = (2, hw, hw) if arch == "mnist_dnn" else (2, hw, hw, 3)
-        batch = {"x": jax.random.normal(rng, shape),
-                 "y": jax.random.randint(rng, (2,), 0, cfg.vocab_size)}
+        batch = {"x": jax.random.normal(k1, shape),
+                 "y": jax.random.randint(k2, (2,), 0, cfg.vocab_size)}
     loss, aux = model.loss(params, batch)
     assert bool(jnp.isfinite(loss))

@@ -34,7 +34,7 @@ def _cfg(n=8, a=3, s=3, **fl_kw):
 
 
 def _clients(n=8, seed=0):
-    return partition_noniid(_DATA, n, l=4, seed=seed)
+    return partition_noniid(_DATA, n, n_labels=4, seed=seed)
 
 
 def _mobile_cfg(n=24, **mob_kw):

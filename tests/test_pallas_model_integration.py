@@ -3,7 +3,6 @@ forward must match the XLA sdpa path."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,7 +1,6 @@
 """Eq. (5)/(7) meta-gradient correctness against the autodiff oracle."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.config import ModelConfig
@@ -53,8 +52,9 @@ def test_perfed_grad_on_neural_model():
     model = build_model(cfg)
     rng = jax.random.PRNGKey(2)
     params = model.init(rng)
-    batch = {"x": jax.random.normal(rng, (8, 28, 28)),
-             "y": jax.random.randint(rng, (8,), 0, 10)}
+    kx, ky = jax.random.split(jax.random.fold_in(rng, 1))
+    batch = {"x": jax.random.normal(kx, (8, 28, 28)),
+             "y": jax.random.randint(ky, (8,), 0, 10)}
     batches = {"inner": batch, "outer": batch, "hessian": batch}
     got = perfed.perfed_grad(model.loss, params, batches, 0.03)
     want = perfed.perfed_grad_exact(model.loss, params, batch, 0.03)

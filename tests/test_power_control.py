@@ -1,6 +1,5 @@
 """Footnote-1 extension: transmit-power control (inverse of Eq. 9 in p)."""
 import numpy as np
-import pytest
 
 from repro.core.bandwidth import (UEChannel, min_power_equal_finish,
                                   power_for_time, uplink_rate)

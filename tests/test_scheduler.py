@@ -1,6 +1,5 @@
 """Algorithm 2 greedy scheduler + Eq. (42)/(43) — property-based."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:                       # clean container (tier-1)

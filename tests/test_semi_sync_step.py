@@ -25,8 +25,9 @@ def setup():
 
 def _cohort_batches(rng, n_cohorts, b=8):
     def one(r):
-        return {"x": jax.random.normal(r, (n_cohorts, b, 28, 28)),
-                "y": jax.random.randint(r, (n_cohorts, b), 0, 10)}
+        rx, ry = jax.random.split(r)
+        return {"x": jax.random.normal(rx, (n_cohorts, b, 28, 28)),
+                "y": jax.random.randint(ry, (n_cohorts, b), 0, 10)}
     r1, r2, r3 = jax.random.split(rng, 3)
     return {"inner": one(r1), "outer": one(r2), "hessian": one(r3)}
 

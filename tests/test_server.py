@@ -70,9 +70,11 @@ def test_row_sums_equal_A():
 def test_stale_ues_get_redistributed():
     srv = _mk(n=4, a=2, s=1)
     # UEs 2,3 never upload; after τ > S=1 they must appear in distribute
-    srv.on_arrival(0, _payload()); r1 = srv.on_arrival(1, _payload())
+    srv.on_arrival(0, _payload())
+    r1 = srv.on_arrival(1, _payload())
     assert set(r1["distribute"]) == {0, 1}          # τ(2)=1 not yet > 1
-    srv.on_arrival(0, _payload()); r2 = srv.on_arrival(1, _payload())
+    srv.on_arrival(0, _payload())
+    r2 = srv.on_arrival(1, _payload())
     assert {2, 3} <= set(r2["distribute"])          # τ = 2 > S
 
 

@@ -1,7 +1,6 @@
 """Logical-axis rules → PartitionSpec resolution."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

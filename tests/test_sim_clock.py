@@ -14,7 +14,6 @@
 * Departed-UE restarts are priced as one batch per drain.
 * Block-chunked fading draws are bitwise the single big ``[k, n]`` call.
 """
-import dataclasses
 
 import numpy as np
 import pytest
@@ -177,7 +176,7 @@ def test_safe_radius_skips_rescoring_settled_ues():
 def _uniform_clients(n, test_size=16, seed=0):
     """Clients whose train/test shapes all match (one vmap group)."""
     out = []
-    for ci, c in enumerate(partition_noniid(_DATA, n, l=4, seed=seed)):
+    for ci, c in enumerate(partition_noniid(_DATA, n, n_labels=4, seed=seed)):
         test = {k: v[:test_size] for k, v in _DATA.items()}
         out.append(ClientDataset(data=c.data, test=test,
                                  labels_held=c.labels_held,
@@ -208,7 +207,7 @@ def test_eval_many_heterogeneous_shapes_fall_back_bitwise():
     fl = _fl_cfg()
     engine = SimulationEngine(_MODEL, fl, "perfed")
     params = _MODEL.init(jax.random.PRNGKey(1))
-    clients = partition_noniid(_DATA, 4, l=4, seed=2)
+    clients = partition_noniid(_DATA, 4, n_labels=4, seed=2)
     batches = [{"inner": c.sample(fl.inner_batch), "outer": dict(c.test)}
                for c in clients]
     sizes = {len(next(iter(b["outer"].values()))) for b in batches}
@@ -273,7 +272,7 @@ def test_departed_restarts_priced_as_one_batch(monkeypatch):
         MobileAdapter, "pre_requeue",
         lambda self, ues: (priced.append([int(u) for u in ues]),
                            orig_pre(self, ues))[1])
-    clients = partition_noniid(_DATA, n, l=4, seed=0)
+    clients = partition_noniid(_DATA, n, n_labels=4, seed=0)
     res = run_simulation(cfg, _MODEL, clients, algorithm="perfed",
                          mode="semi", bandwidth_policy="equal", max_rounds=8,
                          eval_every=0, seed=0, payload_mode="sequential")

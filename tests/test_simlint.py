@@ -1,0 +1,447 @@
+"""simlint rule fixtures + clean-tree gate.
+
+Each fixture seeds one violation and asserts the exact rule code AND
+line; negative twins assert the idiomatic form stays clean.  The final
+test runs the real checker over the real tree with the committed
+baseline and requires zero unsuppressed findings — the same gate CI
+applies.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Baseline, lint_text
+from repro.analysis.core import find_repo_root, run_paths
+
+SRC = "src/repro/fl/somemod.py"          # a library path (rules scoped on)
+HOT = "src/repro/fl/driver.py"           # a hot-path module for SIM2xx
+
+
+def codes_at(findings, code):
+    return [f.line for f in findings if f.code == code
+            and f.status == "active"]
+
+
+# ----------------------------------------------------------------------
+# SIM101 — key reuse
+# ----------------------------------------------------------------------
+def test_sim101_reused_key_flagged():
+    snippet = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (3,))\n"
+        "    b = jax.random.uniform(key, (3,))\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM101") == [4]
+
+
+def test_sim101_split_consumes_key():
+    snippet = (
+        "import jax\n"
+        "def f(key):\n"
+        "    k1, k2 = jax.random.split(key)\n"
+        "    return jax.random.normal(key, (3,))\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM101") == [4]
+
+
+def test_sim101_rebinding_is_clean():
+    snippet = (
+        "import jax\n"
+        "def f(key):\n"
+        "    key, sub = jax.random.split(key)\n"
+        "    a = jax.random.normal(sub, (3,))\n"
+        "    key, sub = jax.random.split(key)\n"
+        "    b = jax.random.normal(sub, (3,))\n"
+        "    return a + b\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM101") == []
+
+
+def test_sim101_fold_in_derivation_is_clean():
+    snippet = (
+        "import jax\n"
+        "def f(key, n):\n"
+        "    return [jax.random.normal(jax.random.fold_in(key, i), (3,))\n"
+        "            for i in range(n)]\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM101") == []
+
+
+def test_sim101_branches_do_not_cross_taint():
+    # a draw in the if-arm must not mark the key consumed for the else-arm
+    snippet = (
+        "import jax\n"
+        "def f(key, p):\n"
+        "    if p:\n"
+        "        return jax.random.normal(key, (3,))\n"
+        "    else:\n"
+        "        return jax.random.uniform(key, (3,))\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM101") == []
+
+
+def test_sim101_loop_reuse_flagged():
+    snippet = (
+        "import jax\n"
+        "def f(key, n):\n"
+        "    out = []\n"
+        "    for _ in range(n):\n"
+        "        out.append(jax.random.normal(key, (3,)))\n"
+        "    return out\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM101") == [5]
+
+
+def test_sim101_sees_through_import_alias():
+    snippet = (
+        "from jax import random as jr\n"
+        "def f(key):\n"
+        "    a = jr.normal(key, (3,))\n"
+        "    b = jr.normal(key, (3,))\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM101") == [4]
+
+
+# ----------------------------------------------------------------------
+# SIM102 — literal seeds
+# ----------------------------------------------------------------------
+def test_sim102_literal_seed_flagged_in_library():
+    snippet = (
+        "import jax\n"
+        "def init():\n"
+        "    return jax.random.PRNGKey(0)\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM102") == [3]
+
+
+def test_sim102_config_seed_is_clean():
+    snippet = (
+        "import jax\n"
+        "def init(seed):\n"
+        "    return jax.random.PRNGKey(seed)\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM102") == []
+
+
+def test_sim102_tests_are_exempt():
+    snippet = (
+        "import jax\n"
+        "key = jax.random.PRNGKey(0)\n"
+    )
+    assert codes_at(lint_text(snippet, "tests/test_x.py"),
+                    "SIM102") == []
+
+
+# ----------------------------------------------------------------------
+# SIM103 — host RNG in library code
+# ----------------------------------------------------------------------
+def test_sim103_np_random_flagged():
+    snippet = (
+        "import numpy as np\n"
+        "def f(seed):\n"
+        "    rng = np.random.default_rng(seed)\n"
+        "    return rng\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM103") == [3]
+
+
+def test_sim103_stdlib_random_import_flagged():
+    snippet = "import random\n"
+    assert codes_at(lint_text(snippet, SRC), "SIM103") == [1]
+
+
+def test_sim103_jax_random_alias_not_confused_with_stdlib():
+    snippet = (
+        "from jax import random\n"
+        "def f(key):\n"
+        "    return random.normal(key, (3,))\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM103") == []
+
+
+def test_sim103_outside_src_repro_is_exempt():
+    snippet = (
+        "import numpy as np\n"
+        "rng = np.random.default_rng(0)\n"
+    )
+    assert codes_at(lint_text(snippet, "benchmarks/b.py"),
+                    "SIM103") == []
+
+
+# ----------------------------------------------------------------------
+# SIM104 — draw schedule branching on Python data (the PR-5 shape)
+# ----------------------------------------------------------------------
+def test_sim104_conditional_draw_flagged():
+    snippet = (
+        "import numpy as np\n"
+        "def step(rng, moving):\n"
+        "    if moving:\n"
+        "        return rng.uniform(size=4)\n"
+        "    return None\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM104") == [4]
+
+
+def test_sim104_unconditional_draw_is_clean():
+    snippet = (
+        "import numpy as np\n"
+        "def step(rng):\n"
+        "    return rng.uniform(size=4)\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM104") == []
+
+
+def test_sim104_jax_draw_in_while_flagged():
+    snippet = (
+        "import jax\n"
+        "def f(key, xs):\n"
+        "    while xs:\n"
+        "        key = jax.random.fold_in(key, 1)\n"
+        "        x = jax.random.normal(key, (2,))\n"
+        "        xs = xs[1:]\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM104") == [5]
+
+
+# ----------------------------------------------------------------------
+# SIM2xx — host/device boundary (hot-path scope)
+# ----------------------------------------------------------------------
+def test_sim201_item_flagged_in_hot_path():
+    snippet = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    return x.sum().item()\n"
+    )
+    assert codes_at(lint_text(snippet, HOT), "SIM201") == [3]
+
+
+def test_sim201_non_hot_path_exempt():
+    snippet = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    return x.sum().item()\n"
+    )
+    assert codes_at(lint_text(snippet, "src/repro/utils/m.py"),
+                    "SIM201") == []
+
+
+def test_sim202_asarray_flagged_and_suppressible():
+    flagged = (
+        "import jax\n"
+        "import numpy as np\n"
+        "def f(x):\n"
+        "    return np.asarray(x)\n"
+    )
+    assert codes_at(lint_text(flagged, HOT), "SIM202") == [4]
+    suppressed = (
+        "import jax\n"
+        "import numpy as np\n"
+        "def f(x):\n"
+        "    # simlint: disable-next=SIM202 -- x is a host list\n"
+        "    return np.asarray(x)\n"
+    )
+    found = lint_text(suppressed, HOT)
+    assert codes_at(found, "SIM202") == []
+    assert [f.status for f in found if f.code == "SIM202"] == \
+        ["suppressed"]
+
+
+def test_sim203_scalar_coercion_flagged():
+    snippet = (
+        "import jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    return float(jnp.max(x))\n"
+    )
+    assert codes_at(lint_text(snippet, HOT), "SIM203") == [3]
+
+
+def test_sim203_shape_metadata_is_clean():
+    snippet = (
+        "import jax\n"
+        "def f(tree):\n"
+        "    return int(jax.tree_util.tree_leaves(tree)[0].shape[0])\n"
+    )
+    assert codes_at(lint_text(snippet, HOT), "SIM203") == []
+
+
+# ----------------------------------------------------------------------
+# SIM3xx — jit purity
+# ----------------------------------------------------------------------
+def test_sim301_print_in_jit_decorated_fn():
+    snippet = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    print('tracing', x)\n"
+        "    return x + 1\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM301") == [4]
+
+
+def test_sim301_reaches_through_call_graph():
+    snippet = (
+        "import jax\n"
+        "def helper(x):\n"
+        "    print(x)\n"
+        "    return x * 2\n"
+        "def outer(x):\n"
+        "    return helper(x)\n"
+        "g = jax.jit(outer)\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM301") == [3]
+
+
+def test_sim301_untraced_fn_may_print():
+    snippet = (
+        "def report(x):\n"
+        "    print(x)\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM301") == []
+
+
+def test_sim302_time_in_scanned_fn():
+    snippet = (
+        "import time\n"
+        "import jax\n"
+        "from jax import lax\n"
+        "def body(carry, x):\n"
+        "    t = time.perf_counter()\n"
+        "    return carry + x, t\n"
+        "def run(xs):\n"
+        "    return lax.scan(body, 0.0, xs)\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM302") == [5]
+
+
+def test_sim303_tracer_span_in_jit():
+    snippet = (
+        "import jax\n"
+        "from repro import obs\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    obs.CURRENT.add('inner')\n"
+        "    return x + 1\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM303") == [5]
+
+
+def test_sim304_nonlocal_mutation_in_jit():
+    snippet = (
+        "import jax\n"
+        "acc = []\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    acc.append(x)\n"
+        "    return x + 1\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM304") == [5]
+
+
+def test_sim304_local_container_is_clean():
+    snippet = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    parts = []\n"
+        "    parts.append(x)\n"
+        "    return parts[0]\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM304") == []
+
+
+def test_sim304_pallas_ref_store_is_clean():
+    snippet = (
+        "import jax\n"
+        "from jax.experimental import pallas as pl\n"
+        "def kernel(x_ref, o_ref):\n"
+        "    o_ref[...] = x_ref[...] * 2\n"
+        "def run(x):\n"
+        "    return pl.pallas_call(kernel, out_shape=x)(x)\n"
+    )
+    assert codes_at(lint_text(snippet, SRC), "SIM304") == []
+
+
+# ----------------------------------------------------------------------
+# SIM4xx — observability read-only
+# ----------------------------------------------------------------------
+def test_sim401_obs_importing_simulator_flagged():
+    snippet = "from repro.fl import driver\n"
+    assert codes_at(lint_text(snippet, "src/repro/obs/bad.py"),
+                    "SIM401") == [1]
+
+
+def test_sim401_obs_allowlist_is_clean():
+    snippet = (
+        "from repro.obs import trace\n"
+        "from repro.utils import metrics\n"
+    )
+    assert codes_at(lint_text(snippet, "src/repro/obs/ok.py"),
+                    "SIM401") == []
+
+
+def test_sim402_obs_calling_mutator_flagged():
+    snippet = (
+        "def peek(net):\n"
+        "    net.advance_to(4.0)\n"
+        "    return net.positions\n"
+    )
+    assert codes_at(lint_text(snippet, "src/repro/obs/bad.py"),
+                    "SIM402") == [2]
+
+
+# ----------------------------------------------------------------------
+# suppression / baseline machinery
+# ----------------------------------------------------------------------
+def test_suppression_same_line_and_file_wide():
+    same_line = (
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (3,))\n"
+        "    b = jax.random.normal(key, (3,))"
+        "  # simlint: disable=SIM101 -- twin draw wanted\n"
+    )
+    assert codes_at(lint_text(same_line, SRC), "SIM101") == []
+    file_wide = (
+        "# simlint: disable-file=SIM101\n"
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.normal(key, (3,))\n"
+        "    b = jax.random.normal(key, (3,))\n"
+    )
+    assert codes_at(lint_text(file_wide, SRC), "SIM101") == []
+
+
+def test_baseline_requires_justification(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text('{"entries": [{"file": "a.py", "code": "SIM103",'
+                 ' "match": "x = 1", "why": ""}]}')
+    with pytest.raises(ValueError):
+        Baseline.load(p)
+
+
+def test_repo_baseline_entries_all_justified():
+    root = find_repo_root(Path(__file__))
+    baseline = Baseline.load(root / "simlint-baseline.json")
+    assert baseline.entries, "baseline exists but is empty"
+    for e in baseline.entries:
+        assert len(e.why.strip()) > 10, (e.file, e.code)
+
+
+# ----------------------------------------------------------------------
+# the gate: the committed tree has zero unsuppressed findings
+# ----------------------------------------------------------------------
+def test_clean_tree_zero_active_findings():
+    root = find_repo_root(Path(__file__))
+    baseline = Baseline.load(root / "simlint-baseline.json")
+    report = run_paths(
+        [root / "src", root / "benchmarks", root / "examples",
+         root / "scripts", root / "tests"],
+        repo_root=root, baseline=baseline)
+    assert report.errors == []
+    assert [f.render() for f in report.active] == []
+    assert [(e.file, e.code) for e in report.stale_baseline] == []
+    # ≥ 4 rule families exercised on the real tree (suppressed/baselined
+    # findings still prove the family fires)
+    families = {f.code[:4] for f in report.findings}
+    assert {"SIM1", "SIM2"} <= families

@@ -1,6 +1,5 @@
 """Hypothesis property tests on the event-driven simulator's invariants."""
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:                       # clean container (tier-1)
@@ -22,7 +21,7 @@ def _run(n, a, s, mode, seed, rounds=6, bandwidth="optimal"):
         fl=FLConfig(n_ues=n, participants_per_round=a, staleness_bound=s,
                     alpha=0.03, beta=0.07, inner_batch=8, outer_batch=8,
                     hessian_batch=8))
-    clients = partition_noniid(_DATA, n, l=4, seed=seed)
+    clients = partition_noniid(_DATA, n, n_labels=4, seed=seed)
     return run_simulation(cfg, _MODEL, clients, algorithm="perfed",
                           mode=mode, bandwidth_policy=bandwidth,
                           max_rounds=rounds, eval_every=100, seed=seed)
