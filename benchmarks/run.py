@@ -33,6 +33,7 @@ SUITES = [
     "mobility",          # mobile multi-cell: speed × cells at 1024 UEs
     "event_loop",        # host-vs-device split, UE-count sweep to 16384
     "requeue",           # batched vs legacy per-UE requeue pricing
+    "scenarios",         # open-world churn/diurnal/flash matrix × policy
     "roofline",          # §Roofline — from dry-run artifacts
 ]
 

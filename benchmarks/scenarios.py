@@ -1,0 +1,180 @@
+"""Open-world scenario suite: policy × scenario matrix on the mobile loop.
+
+The scenario registry below is the canonical catalogue of open-world
+traffic shapes (``cfg.scenario``): a closed-world baseline, steady
+Poisson churn, a diurnal load wave, a flash-crowd hotspot window, and
+non-stationary label drift.  Each is run against ≥2 bandwidth policies
+on the 3-cell hierarchical mobile topology and the per-point lifecycle
+counters (joins / departures / drifts / aborted rounds), completion,
+and wait fraction are recorded — the matrix that demonstrates the
+churn-adaptive round-size clamp keeps every scenario completing.
+
+    PYTHONPATH=src python -m benchmarks.scenarios           # full matrix
+    PYTHONPATH=src python benchmarks/scenarios.py --smoke   # CI smoke
+
+Emits the standard CSV rows and writes ``BENCH_scenarios.json``
+(``BENCH_scenarios_smoke.json`` under ``--smoke``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):          # run as a script, not -m
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import emit
+
+N_UES = 64
+ROUNDS = 12
+POLICIES = ("equal", "theorem2")
+OUT_JSON = "BENCH_scenarios.json"
+
+SMOKE_N_UES = 32
+SMOKE_ROUNDS = 4
+SMOKE_POLICIES = ("equal",)
+
+
+def scenario_registry():
+    """name → ``ScenarioConfig`` for every catalogued traffic shape.
+
+    Rates are in simulated seconds (a round at this scale closes in
+    ~0.2–0.5 sim-s, so per-run event counts stay O(10)).
+    """
+    from repro.config import ScenarioConfig
+    return {
+        # closed world: the scenario machinery fully disabled — the
+        # baseline every open-world point is compared against
+        "static": ScenarioConfig(enabled=False),
+        # steady churn: Poisson joins vs per-UE exponential departures
+        # (equilibrium population = arrival/departure = 20 < initial 48,
+        # so cells shrink below their nominal A — the live-lock regime
+        # the adaptive clamp exists for)
+        "churn": ScenarioConfig(
+            enabled=True, initial_active_frac=0.75,
+            arrival_rate=1.0, departure_rate=0.05, min_active=8),
+        # diurnal wave: the same churn modulated by a full-depth
+        # sinusoidal intensity (trough ≈ 0.1×, crest ≈ 1.9× base rate)
+        "diurnal": ScenarioConfig(
+            enabled=True, initial_active_frac=0.75,
+            arrival_rate=2.0, departure_rate=0.05, min_active=8,
+            diurnal_amplitude=0.9, diurnal_period_s=4.0),
+        # flash crowd: a boosted-arrival window that also retargets half
+        # the live population's waypoints at the hotspot cell
+        "flash_crowd": ScenarioConfig(
+            enabled=True, initial_active_frac=0.6,
+            arrival_rate=0.5, departure_rate=0.03, min_active=8,
+            flash_time_s=0.5, flash_duration_s=2.0,
+            flash_arrival_boost=6.0, flash_hotspot_cell=0,
+            flash_hotspot_frac=0.5),
+        # label drift: light churn plus per-UE non-stationary label
+        # remapping (30% of a drifting client's labels permute)
+        "drift": ScenarioConfig(
+            enabled=True, initial_active_frac=0.9,
+            arrival_rate=0.5, departure_rate=0.02, min_active=8,
+            drift_rate=0.5, drift_frac=0.3),
+    }
+
+
+def _setup(n_ues: int, seed: int = 0):
+    from repro.config import ExperimentConfig, FLConfig, MobilityConfig
+    from repro.configs import get_config
+    from repro.data import partition_noniid, synthetic_mnist
+    from repro.models import build_model
+
+    cfg = ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        fl=FLConfig(n_ues=n_ues,
+                    participants_per_round=max(1, n_ues // 8),
+                    staleness_bound=8, alpha=0.03, beta=0.07,
+                    first_order=True,
+                    inner_batch=4, outer_batch=4, hessian_batch=4),
+        mobility=MobilityConfig(enabled=True, model="random_waypoint",
+                                speed_mps=20.0, n_cells=3, hierarchy=True,
+                                cloud_sync_every=4, step_s=0.2))
+    model = build_model(cfg.model)
+    data = synthetic_mnist(n=max(1250, 10 * n_ues), seed=seed)
+    clients = partition_noniid(data, n_ues, n_labels=4, seed=seed)
+    return cfg, model, clients
+
+
+def _point(cfg, model, clients, *, scenario, policy: str,
+           rounds: int) -> dict:
+    import dataclasses
+
+    from repro.fl.simulation import run_simulation
+
+    cfg = dataclasses.replace(cfg, scenario=scenario)
+    t0 = time.perf_counter()
+    res = run_simulation(cfg, model, clients, algorithm="perfed",
+                         mode="semi", bandwidth_policy=policy,
+                         max_rounds=rounds, eval_every=0, seed=0)
+    wall = time.perf_counter() - t0
+    completed = int(res.pi.shape[0])
+    return {"policy": policy, "rounds_requested": rounds,
+            "rounds": completed, "wall_s": wall,
+            "sim_time_s": res.total_time,
+            "wait_fraction": res.wait_fraction,
+            "handovers": res.handovers,
+            "ue_joins": res.ue_joins,
+            "ue_departures": res.ue_departures,
+            "label_drifts": res.label_drifts,
+            "aborted_rounds": res.aborted_rounds,
+            "pending_uploads": res.pending_uploads}
+
+
+def run(smoke: bool = False) -> None:
+    n_ues = SMOKE_N_UES if smoke else N_UES
+    rounds = SMOKE_ROUNDS if smoke else ROUNDS
+    policies = SMOKE_POLICIES if smoke else POLICIES
+    registry = scenario_registry()
+    if smoke:
+        import dataclasses
+
+        # the closed-world pin plus the churn shape that exercises every
+        # lifecycle path (joins, leaves, adaptive clamp); rates are
+        # boosted so events actually fire inside the ~1 simulated second
+        # a 4-round smoke run spans
+        registry = {"static": registry["static"],
+                    "churn": dataclasses.replace(
+                        registry["churn"],
+                        arrival_rate=8.0, departure_rate=0.4)}
+
+    cfg, model, clients = _setup(n_ues)
+    results = {"n_ues": n_ues, "rounds": rounds, "smoke": smoke,
+               "matrix": []}
+    for name, scen in registry.items():
+        for policy in policies:
+            pt = _point(cfg, model, clients, scenario=scen,
+                        policy=policy, rounds=rounds)
+            pt["scenario"] = name
+            results["matrix"].append(pt)
+            emit(f"scenarios/{name}/bw={policy}/n={n_ues}",
+                 pt["wall_s"] / max(pt["rounds"], 1) * 1e6,
+                 f"rounds={pt['rounds']}/{rounds};"
+                 f"joins={pt['ue_joins']};"
+                 f"departs={pt['ue_departures']};"
+                 f"aborted={pt['aborted_rounds']}")
+            # every catalogued scenario must complete under the adaptive
+            # clamp — an aborted round here is the live-lock regression
+            assert pt["rounds"] == rounds, \
+                f"{name}/{policy}: only {pt['rounds']}/{rounds} rounds"
+            assert pt["aborted_rounds"] == 0, \
+                f"{name}/{policy}: aborted {pt['aborted_rounds']} round(s)"
+    if not smoke:
+        churny = [p for p in results["matrix"]
+                  if p["scenario"] != "static"]
+        assert any(p["ue_joins"] > 0 for p in churny), "no join fired"
+        assert any(p["ue_departures"] > 0 for p in churny), "no leave fired"
+    # smoke mode must not clobber the committed full-matrix artifact
+    out = "BENCH_scenarios_smoke.json" if smoke else OUT_JSON
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}", flush=True)
+
+
+if __name__ == "__main__":
+    run(smoke="--smoke" in sys.argv)

@@ -68,17 +68,31 @@ def render(rows, max_rounds: int = DEFAULT_ROUNDS_SHOWN) -> str:
             out.append("arrivals per cell: " + ", ".join(
                 f"c{c}={a}" for c, a in sorted(per_cell.items(),
                                                key=lambda kv: int(kv[0]))))
+        churn = {k: summary[k] for k in ("ue_joins", "ue_departures",
+                                         "label_drifts", "aborted_rounds")
+                 if summary.get(k)}
+        if churn:
+            out.append("churn: " + ", ".join(
+                f"{k}={v}" for k, v in churn.items()))
     if recs:
+        # open-world traces carry live per-cell membership per round
+        has_members = any("cell_members" in r for r in recs)
         out.append("")
         out.append(f"{'round':>5s} {'cell':>4s} {'a':>4s} {'heap':>5s} "
                    f"{'t_sim':>9s} {'wall_ms':>8s} {'dev_ms':>8s} "
-                   f"{'disp':>5s}")
+                   f"{'disp':>5s}"
+                   + ("  members" if has_members else ""))
         shown = recs if max_rounds <= 0 else recs[:max_rounds]
         for r in shown:
-            out.append(f"{r['round']:>5d} {r['cell']:>4d} {r['a']:>4d} "
-                       f"{r['heap_depth']:>5d} {r['t_sim']:>9.2f} "
-                       f"{r['wall_s']*1e3:>8.2f} {r['device_s']*1e3:>8.2f} "
-                       f"{r['dispatches']:>5d}")
+            line = (f"{r['round']:>5d} {r['cell']:>4d} {r['a']:>4d} "
+                    f"{r['heap_depth']:>5d} {r['t_sim']:>9.2f} "
+                    f"{r['wall_s']*1e3:>8.2f} {r['device_s']*1e3:>8.2f} "
+                    f"{r['dispatches']:>5d}")
+            if has_members:
+                cm = r.get("cell_members")
+                line += "  " + ("/".join(str(m) for m in cm)
+                                if cm is not None else "-")
+            out.append(line)
         if len(recs) > len(shown):
             out.append(f"... {len(recs) - len(shown)} more rounds "
                        f"(--rounds 0 for all)")

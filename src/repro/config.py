@@ -264,6 +264,57 @@ class MobilityConfig:
 
 
 @dataclass(frozen=True)
+class ScenarioConfig:
+    """Open-world traffic/churn dynamics (``src/repro/fl/scenario.py``).
+
+    ``enabled=False`` (default) keeps the closed-world simulator: an
+    immortal, stationary UE population, bitwise identical to every
+    pre-scenario golden.  ``enabled=True`` turns the UE pool open: a
+    Poisson arrival process activates dormant UEs mid-run (they are
+    priced and queued like any other cycle), a per-UE departure hazard
+    deactivates them (their in-flight upload cancels through the
+    driver's epoch mechanism), the arrival intensity can carry a diurnal
+    wave and a flash-crowd window (which also retargets a fraction of
+    random-waypoint UEs at a hotspot cell), and each UE's label
+    distribution can drift over simulated time.
+
+    All scenario randomness comes from one auxiliary stream seeded by
+    ``(sim seed, scenario seed)`` — enabling a scenario never perturbs
+    the fading / mobility / payload RNG schedules.
+    """
+    enabled: bool = False
+    # --- population ----------------------------------------------------
+    # fraction of the UE pool active at t=0 (the rest is the dormant
+    # pool Poisson arrivals draw from; always at least one UE active)
+    initial_active_frac: float = 1.0
+    # --- Poisson churn -------------------------------------------------
+    arrival_rate: float = 0.0        # expected UE joins per simulated second
+    departure_rate: float = 0.0      # per-active-UE departure hazard [1/s]
+    min_active: int = 1              # departures never go below this
+    horizon_s: float = 0.0           # no churn events after this (0 → unbounded)
+    # --- diurnal load wave: λ(t) *= 1 + amp·sin(2π t / period) ---------
+    diurnal_amplitude: float = 0.0   # in [0, 1]
+    diurnal_period_s: float = 0.0    # 0 → no wave
+    # --- flash crowd ---------------------------------------------------
+    flash_time_s: float = -1.0       # window start (< 0 → no flash)
+    flash_duration_s: float = 0.0
+    flash_arrival_boost: float = 1.0  # λ multiplier inside the window
+    flash_hotspot_cell: int = 0      # BS whose vicinity is the hotspot
+    # fraction of active random-waypoint UEs retargeted at the hotspot
+    flash_hotspot_frac: float = 0.0
+    # --- non-stationary label drift ------------------------------------
+    drift_rate: float = 0.0          # per-active-UE drift hazard [1/s]
+    drift_frac: float = 0.3          # fraction of samples remapped per event
+    # --- protocol under churn ------------------------------------------
+    # clamp each cell's effective round size A to its live membership so
+    # a cell that shrinks below A keeps closing (smaller) rounds instead
+    # of live-locking; False reproduces the frozen-A legacy behaviour
+    # (the stall is then surfaced via SimResult.aborted_rounds)
+    adaptive_cell_a: bool = True
+    seed: int = 0                    # scenario stream (auxiliary)
+
+
+@dataclass(frozen=True)
 class ObsConfig:
     """Observability (``src/repro/obs``): tracing, telemetry, reporting.
 
@@ -339,6 +390,7 @@ class ExperimentConfig:
     fl: FLConfig = field(default_factory=FLConfig)
     wireless: WirelessConfig = field(default_factory=WirelessConfig)
     mobility: MobilityConfig = field(default_factory=MobilityConfig)
+    scenario: ScenarioConfig = field(default_factory=ScenarioConfig)
     obs: ObsConfig = field(default_factory=ObsConfig)
     train: TrainConfig = field(default_factory=TrainConfig)
     mesh: MeshConfig = field(default_factory=MeshConfig)

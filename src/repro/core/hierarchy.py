@@ -52,7 +52,9 @@ class HierarchicalServer:
         self.hcfg = hcfg
         self.cells = [SemiSyncServer(params, cfg) for cfg in cell_cfgs]
         n = cell_cfgs[0].n_ues
-        self.member_cell = np.zeros(n, dtype=np.int64)
+        # −1 = not a member of any cell (dormant / departed under the
+        # open-world scenario; a closed-world init covers every index)
+        self.member_cell = np.full(n, -1, dtype=np.int64)
         for c, srv in enumerate(self.cells):
             srv.ue_version[:] = NON_MEMBER
             # simlint: disable-next=SIM202 -- host membership list
@@ -73,6 +75,43 @@ class HierarchicalServer:
 
     def arrivals_until_round(self, c: int) -> int:
         return self.cells[c].arrivals_until_round()
+
+    def set_live_cap(self, c: int, members: int, in_flight: int) -> None:
+        """Clamp cell ``c``'s effective round size to live membership
+        (see ``SemiSyncServer.set_live_cap``)."""
+        self.cells[c].set_live_cap(members, in_flight)
+
+    def flush(self, c: int) -> Optional[Dict[str, Any]]:
+        """Close cell ``c``'s round if its clamped target is already met
+        (``SemiSyncServer.flush``), with the full hierarchy bookkeeping —
+        membership-filtered distribution, cloud-merge cadence."""
+        res = self.cells[c].flush()
+        return None if res is None else self._finish(c, res)
+
+    def pending_uploads(self) -> int:
+        return sum(srv.pending_uploads() for srv in self.cells)
+
+    def open_rounds(self) -> int:
+        """Cells currently holding uploads toward an unclosed round."""
+        return sum(1 for srv in self.cells if srv.pending_uploads() > 0)
+
+    # --- open-world UE lifecycle (scenario churn) ----------------------
+    def join(self, ue: int, c: int) -> None:
+        """Activate ``ue`` as a member of cell ``c`` with a fresh model
+        (version = the cell's current round → staleness 0)."""
+        self.member_cell[ue] = c
+        self.cells[c].ue_version[ue] = self.cells[c].round
+
+    def leave(self, ue: int) -> None:
+        """Depart ``ue``: it stops being a member anywhere.  Its pending
+        upload (if any) still aggregates when the round closes, but
+        ``_finish``'s membership filter keeps it out of the distribution
+        — no resurrection.  The caller cancels in-flight computation via
+        the driver's epoch mechanism."""
+        c = int(self.member_cell[ue])
+        if c >= 0:
+            self.cells[c].ue_version[ue] = NON_MEMBER
+        self.member_cell[ue] = -1
 
     @property
     def params(self) -> Any:
@@ -96,6 +135,10 @@ class HierarchicalServer:
         """A version giving a *departed* UE a sensible τ in cell ``c``'s
         clock: its current staleness, read from the cell it now lives in."""
         cur = int(self.member_cell[ue])
+        if cur < 0:
+            # departed the whole network (open-world churn): no live round
+            # clock to read — weight the straggler upload as fresh
+            return np.int64(self.cells[c].round)
         tau = max(int(self.cells[cur].staleness(ue)), 0)
         return np.int64(self.cells[c].round - tau)
 
@@ -196,7 +239,8 @@ class HierarchicalServer:
         self.edge_rounds += 1
         self.history_pi.append(self.cells[c].history_pi[-1])
         self.history_cell.append(c)
-        self._arrivals_since_sync[c] += self.cells[c].a
+        # realised round size (== A except live-cap-clamped churn rounds)
+        self._arrivals_since_sync[c] += int(self.cells[c].history_pi[-1].sum())
         res = dict(res)
         # the cell's _advance_round stamped fresh versions on everyone it
         # distributes to — departed UEs must not be resurrected as members

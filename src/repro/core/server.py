@@ -44,6 +44,18 @@ class SemiSyncServer:
         self.round = 0
         self.a = {"sync": cfg.n_ues, "semi": cfg.participants_per_round,
                   "async": 1}[cfg.mode]
+        # effective close threshold for the CURRENT round: equals ``a``
+        # until ``set_live_cap`` clamps it to live membership (open-world
+        # churn: a cell that shrinks below A must keep closing — smaller —
+        # rounds instead of live-locking).  Frozen between cap updates so
+        # ``arrivals_until_round`` is stable across one driver drain.
+        self._target = self.a
+        self._live_cap: Optional[int] = None
+        # which UEs currently exist (scenario churn departs/joins them);
+        # inactive UEs are never distributed to — a pending upload from a
+        # UE that departed before its round closed still aggregates, but
+        # must not resurrect it with a fresh model
+        self.ue_active = np.ones(cfg.n_ues, dtype=bool)
         # version of the global model each UE last received
         self.ue_version = np.zeros(cfg.n_ues, dtype=np.int64)
         # (ue, payload, staleness-at-arrival) per pending upload
@@ -57,14 +69,64 @@ class SemiSyncServer:
         self.history_staleness: List[np.ndarray] = []
 
     # ------------------------------------------------------------------
+    @property
+    def target(self) -> int:
+        """The current round's effective close threshold (≤ A)."""
+        return self._target
+
+    def pending_uploads(self) -> int:
+        """Uploads held for the currently open round (both feed paths)."""
+        return len(self._pending) + self._seg_n
+
+    def pending_ue_set(self) -> set:
+        """UEs with an upload held for the open round (both feed paths) —
+        the ``pre_drain`` live-cap computation subtracts these from the
+        members that can still produce an arrival."""
+        out = {ue for ue, _, _ in self._pending}
+        for ues, _, _ in self._pending_seg:
+            out.update(int(u) for u in ues)
+        return out
+
+    def set_live_cap(self, members: int, in_flight: int) -> None:
+        """Clamp the effective round size to what can still arrive.
+
+        ``target = min(A, pending + in_flight)``: every upload already
+        held counts, plus each live member whose cycle is still in flight
+        can contribute at most one more before the close — the round
+        never waits for uploads no existing UE can produce.  The caller
+        (``TopologyAdapter.pre_drain``) computes ``in_flight`` as live
+        members without a pending upload here.  Caps are pushed only
+        BETWEEN drains, so the threshold is constant while a drain is in
+        flight — the drain invariant (at most one round closes, on the
+        last lane) is preserved.  With membership ≥ A this is exactly
+        ``target = A``: closed-world runs are bitwise unaffected.  When
+        the clamp lands at (or below) the pending count no future arrival
+        will trigger the close — ``flush`` closes such a round.
+        """
+        self._live_cap = int(members)
+        p = self.pending_uploads()
+        self._target = max(1, min(self.a, p + max(int(in_flight), 0)))
+
+    def activate(self, ue: int) -> None:
+        """(Re-)join: the UE exists again and starts from the current
+        round's model (the caller hands it the params; version = round
+        means staleness 0)."""
+        self.ue_active[ue] = True
+        self.ue_version[ue] = self.round
+
+    def deactivate(self, ue: int) -> None:
+        """Depart: no future distribution; any in-flight upload is the
+        caller's to cancel (driver epoch bump)."""
+        self.ue_active[ue] = False
+
     def arrivals_until_round(self) -> int:
-        """How many more uploads close the current round (A − pending).
+        """How many more uploads close the current round (target − pending).
 
         Until that many arrive, no global update, distribution, or
         cancellation can happen — which is exactly what lets the simulator
         drain that many events and compute their payloads as one batch.
         """
-        return self.a - len(self._pending) - self._seg_n
+        return self._target - len(self._pending) - self._seg_n
 
     def staleness(self, ue: int) -> int:
         """τ_k^i — rounds since UE i last received the global model."""
@@ -79,8 +141,11 @@ class SemiSyncServer:
             raise RuntimeError("segment uploads pending; feed rounds "
                                "through on_arrival_batch consistently")
         self._pending.append((ue, payload, self.staleness(ue)))
-        if len(self._pending) < self.a:
+        if len(self._pending) < self._target:
             return None
+        return self._close_pending()
+
+    def _close_pending(self) -> Dict[str, Any]:
         arrived = self._pending
         self._pending = []
         # --- Eq. (8): w_{k+1} = w_k − β/A Σ_{i∈A_k} ∇̃F_i(w_{k−τ_k^i}),
@@ -119,12 +184,14 @@ class SemiSyncServer:
         # simlint: disable-next=SIM202 -- taus is host bookkeeping
         self._pending_seg.append((ues, np.asarray(taus, np.int64), payloads))
         self._seg_n += len(ues)
-        if self._seg_n > self.a:
-            raise RuntimeError(f"segment overshoots A={self.a}: "
+        if self._seg_n > self._target:
+            raise RuntimeError(f"segment overshoots target={self._target}: "
                                f"{self._seg_n} lanes pending")
-        if self._seg_n < self.a:
+        if self._seg_n < self._target:
             return None
+        return self._close_segments()
 
+    def _close_segments(self) -> Dict[str, Any]:
         segs = self._pending_seg
         self._pending_seg, self._seg_n = [], 0
         all_ues = np.concatenate([u for u, _, _ in segs])
@@ -142,6 +209,22 @@ class SemiSyncServer:
             beta=self.cfg.beta)
         return self._advance_round([int(u) for u in all_ues])
 
+    def flush(self) -> Optional[Dict[str, Any]]:
+        """Close the open round NOW if its pending uploads already meet
+        the live-cap-clamped target.
+
+        Churn can lower the target to (or below) the pending count
+        *after* those uploads arrived — every remaining member's upload
+        is already in — so no future arrival exists to trigger the
+        ordinary close and waiting would live-lock.  Returns the round
+        result, or ``None`` while more arrivals are still possible."""
+        p = self.pending_uploads()
+        if p == 0 or p < self._target:
+            return None
+        if self._pending:
+            return self._close_pending()
+        return self._close_segments()
+
     def on_round_batch(self, ues: Sequence[int],
                        aggregate_fn: Callable) -> Dict[str, Any]:
         """Fused fast path: a full round of uploads arrives at once.
@@ -156,9 +239,9 @@ class SemiSyncServer:
         if self._pending or self._pending_seg:
             raise RuntimeError("pending uploads exist; use on_arrival / "
                                "on_arrival_batch")
-        if len(ues) != self.a:
-            raise ValueError(f"round batch needs exactly A={self.a} uploads, "
-                             f"got {len(ues)}")
+        if len(ues) != self._target:
+            raise ValueError(f"round batch needs exactly target="
+                             f"{self._target} uploads, got {len(ues)}")
         weights = self._weights([self.staleness(u) for u in ues])
         self.params = aggregate_fn(self.params, weights)
         return self._advance_round(list(ues))
@@ -170,7 +253,9 @@ class SemiSyncServer:
         if lam < 1.0:
             # simlint: disable-next=SIM202 -- taus is a host int list
             wts = np.array([lam ** tau for tau in taus])
-            return wts * (self.a / max(wts.sum(), 1e-12))
+            # normalise by the realised round size (== A except for
+            # live-cap-clamped rounds under churn)
+            return wts * (len(taus) / max(wts.sum(), 1e-12))
         return np.ones(len(taus))
 
     def _advance_round(self, arrived_ues: List[int]) -> Dict[str, Any]:
@@ -184,11 +269,20 @@ class SemiSyncServer:
 
         self.round += 1
         # --- distribution rule (Alg. 1 line 13-15) -------------------------
-        distribute = sorted(set(arrived_ues)
-                            | {i for i in range(self.cfg.n_ues)
-                               if self.staleness(i) > self.cfg.staleness_bound})
+        # departed UEs are filtered out: an upload from a UE that left
+        # while pending still aggregated above, but distribution would
+        # resurrect it with a fresh cycle
+        distribute = sorted(
+            {i for i in arrived_ues if self.ue_active[i]}
+            | {i for i in range(self.cfg.n_ues)
+               if self.ue_active[i]
+               and self.staleness(i) > self.cfg.staleness_bound})
         for i in distribute:
             self.ue_version[i] = self.round
+        if self._live_cap is not None:
+            # re-arm the next round's threshold from the last cap push
+            # (pending is empty again; refreshed at the next pre_drain)
+            self._target = max(1, min(self.a, max(self._live_cap, 1)))
         return {"round": self.round, "distribute": distribute,
                 "params": self.params}
 

@@ -35,6 +35,38 @@ class ClientDataset:
         n = len(self)
         return (min(b_in, n), min(b_o, n), min(b_h, n))
 
+    def drift_labels(self, rng: np.random.Generator, frac: float,
+                     label_key: str = "y") -> int:
+        """Non-stationary label drift (scenario suite): remap a random
+        ``frac`` of this client's samples under a random permutation of
+        the classes it holds, in BOTH splits — the personalized eval
+        then reflects the drifted distribution, not the drop-time one.
+
+        Draws only from the caller's ``rng`` (the scenario stream), never
+        from the private sampling generator, so enabling drift does not
+        perturb the batch-index schedule of undrifted clients.  Returns
+        the number of samples whose label actually changed (0 when the
+        client holds fewer than two classes, or has no label field).
+        """
+        if label_key not in self.data:
+            return 0
+        classes = np.unique(np.concatenate(
+            [self.data[label_key], self.test[label_key]]))
+        if len(classes) < 2:
+            return 0
+        perm = classes[rng.permutation(len(classes))]
+        lut = np.zeros(int(classes.max()) + 1, dtype=classes.dtype)
+        lut[classes] = perm
+        changed = 0
+        for split in (self.data, self.test):
+            y = split[label_key]
+            pick = rng.random(len(y)) < frac
+            new_y = np.where(pick, lut[y], y)
+            changed += int(np.count_nonzero(new_y != y))
+            split[label_key] = new_y
+        self.labels_held = np.unique(self.data[label_key])
+        return changed
+
     def sample_triplet(self, b_in: int, b_o: int, b_h: int) -> Dict[str, Dict]:
         """Three *independent* batches (D_in, D_o, D_h of Eq. 7).
 

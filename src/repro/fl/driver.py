@@ -57,6 +57,7 @@ import numpy as np
 from repro.config import ExperimentConfig
 from repro.data.partition import ClientDataset, sample_triplet_many
 from repro.fl.engine import SimulationEngine, ensure_engine
+from repro.fl.scenario import DRIFT, FLASH, JOIN, LEAVE, make_scenario
 from repro.obs import trace as obs
 from repro.obs.recorder import SCHEMA, RoundRecorder
 from repro.utils.metrics import MetricsLogger
@@ -87,6 +88,14 @@ class SimResult:
     handovers: int = 0           # nearest-BS re-associations during the run
     cloud_rounds: int = 0        # hierarchical cloud merges performed
     departed_arrivals: int = 0   # uploads that arrived after a handover
+    # open-world scenario extension (zeros on closed-world runs)
+    ue_joins: int = 0            # Poisson arrivals activated mid-run
+    ue_departures: int = 0       # departures (in-flight work epoch-cancelled)
+    label_drifts: int = 0        # per-UE label-drift events applied
+    # rounds still holding uploads when the event heap ran dry before the
+    # round target was met (silent loss before; now counted + warned)
+    aborted_rounds: int = 0
+    pending_uploads: int = 0     # uploads those aborted rounds were holding
     # end-of-run telemetry summary (None unless the run was traced):
     # per-phase host seconds, device seconds, counters, per-cell arrivals,
     # and the JSONL trace path when one was written — see obs/recorder.py
@@ -151,6 +160,61 @@ class TopologyAdapter:
         """The top-level protocol object (``params`` / ``pi_matrix`` /
         ``realised_eta``)."""
         raise NotImplementedError
+
+    def pending_uploads(self) -> int:
+        """Uploads held toward rounds that have not closed yet."""
+        p = self.protocol()
+        return int(p.pending_uploads()) if hasattr(p, "pending_uploads") \
+            else 0
+
+    def open_rounds(self) -> int:
+        """Rounds currently holding at least one pending upload."""
+        p = self.protocol()
+        if hasattr(p, "open_rounds"):
+            return int(p.open_rounds())
+        return 1 if self.pending_uploads() > 0 else 0
+
+    # --- open-world scenario hooks (closed world: all no-ops) ----------
+    def bind_active(self, mask: np.ndarray) -> None:
+        """Receive the scenario's live activity mask BEFORE
+        ``make_servers`` — initial membership, round sizes and bandwidth
+        must see only the UEs active at t=0.  The array is shared: the
+        scenario runtime flips bits in place as UEs join/leave."""
+
+    def pre_drain(self) -> None:
+        """Called once before every drain.  Adapters that clamp round
+        sizes to live membership push the caps HERE — never mid-drain, so
+        ``need`` stays constant while a drain is in flight (the drain
+        invariant: at most one round closes, on the last lane)."""
+
+    def flush_ready(self) -> List[Dict[str, Any]]:
+        """Round results for every open round whose (live-cap-clamped)
+        target its pending uploads already meet — churn can lower a
+        target to the pending count after those uploads arrived, and no
+        future arrival exists to close such a round through the ordinary
+        path.  Called right after ``pre_drain``; closed world: none."""
+        return []
+
+    def on_join(self, ue: int) -> Any:
+        """A dormant UE joins (scenario arrival): activate it in the
+        topology/protocol and return the model params it starts from."""
+        return self.protocol().params
+
+    def on_leave(self, ue: int) -> None:
+        """An active UE departs: deactivate it everywhere.  The driver
+        has already epoch-cancelled its in-flight upload."""
+
+    def on_flash(self, idx: np.ndarray,
+                 rng: np.random.Generator) -> int:
+        """Flash-crowd window opens: retarget ``idx`` toward the hotspot
+        (mobility-model permitting).  Returns how many UEs were
+        retargeted."""
+        return 0
+
+    def cell_membership(self) -> Optional[List[int]]:
+        """Live per-protocol-cell membership counts for trace records
+        (``None`` → the recorder omits the field)."""
+        return None
 
     # --- topology hooks (static topology: all no-ops) ------------------
     def bind_link_budget(self, z_bits: float, d_i: np.ndarray) -> None:
@@ -368,6 +432,12 @@ def _event_loop(cfg: ExperimentConfig, model,
     else:
         alphas = np.full(n, fl.alpha)
 
+    # open-world scenario (None = closed world, zero overhead): the
+    # activity mask must be bound BEFORE make_servers so initial
+    # membership / round sizes / bandwidth see only the t=0-active UEs
+    scen = make_scenario(cfg.scenario, n, seed)
+    if scen is not None:
+        adapter.bind_active(scen.active)
     adapter.make_servers(params0)
 
     # --- per-UE state -------------------------------------------------------
@@ -415,16 +485,19 @@ def _event_loop(cfg: ExperimentConfig, model,
     # dropped at pop time if its epoch is outdated.
     # event = (t_finish, seq, ue, version, duration, epoch, dispatch_cell)
     epoch = np.zeros(n, dtype=np.int64)
-    all_ues = np.arange(n)
-    fill_cells = adapter.dispatch_cells(all_ues)
+    # only t=0-active UEs get an initial cycle; the dormant pool is what
+    # scenario arrivals later activate (closed world: everyone)
+    fill_ues = np.arange(n) if scen is None else np.nonzero(scen.active)[0]
+    fill_cells = adapter.dispatch_cells(fill_ues)
     # events are totally ordered by (t, seq), so heapify yields the exact
     # pop sequence of n pushes at a fraction of the fill cost
     heap: List[Tuple[float, int, int, int, float, int, int]] = [
-        (float(dur), i, int(i), 0, float(dur), 0, int(c))
-        for i, (dur, c) in enumerate(zip(cycle_durations(all_ues),
-                                         fill_cells))]
+        (float(dur), i, int(ue), 0, float(dur), 0, int(c))
+        for i, (ue, dur, c) in enumerate(zip(fill_ues,
+                                             cycle_durations(fill_ues),
+                                             fill_cells))]
     heapq.heapify(heap)
-    seq = n
+    seq = len(fill_ues)
 
     times, plosses, glosses, accs, rounds_at = [], [], [], [], []
     t_now = 0.0
@@ -454,6 +527,12 @@ def _event_loop(cfg: ExperimentConfig, model,
         # holds a fresh cycle — restarting it too would double-queue it.
         nonlocal seq
         items = [it for it in items if it[0] not in redistributed]
+        if scen is not None:
+            # a UE that departed mid-flight gets no fresh cycle: its
+            # already-finished upload may still aggregate (stale-tolerant
+            # protocol), but restarting it would resurrect a zombie that
+            # keeps computing after it left the system
+            items = [it for it in items if scen.active[it[0]]]
         if not items:
             return
         with obs.CURRENT.span("restart"):
@@ -468,6 +547,48 @@ def _event_loop(cfg: ExperimentConfig, model,
 
     redistributed: set = set()          # UEs given a new cycle this drain
 
+    def apply_scenario_event(ev: Tuple[float, str, int]) -> bool:
+        """One open-world lifecycle event, in simulated-time order with
+        the heap.  Joins are priced and queued like any other cycle;
+        leaves cancel in-flight work via the epoch mechanism (exactly the
+        τ > S refresh path); drift rewrites the client's labels; flash
+        retargets waypoints at the hotspot.  Returns True when the event
+        changed membership — the caller must then end its drain so the
+        live-membership round caps can re-arm (``pre_drain``/``flush``)
+        before any further pops."""
+        nonlocal seq
+        t_ev, kind, ue = ev
+        adapter.advance_to(t_ev)
+        if kind == JOIN:
+            # a joining UE starts from the model its cell would hand it,
+            # with a fresh cycle priced through the ordinary batched path
+            held_params[ue] = adapter.on_join(ue)
+            epoch[ue] += 1              # orphan any stray old event
+            obs.CURRENT.add("driver.ue_joins")
+            dc = int(adapter.dispatch_cells([ue])[0])
+            dur = float(cycle_durations([ue])[0])
+            heapq.heappush(heap, (t_ev + dur, seq, ue,
+                                  adapter.rounds_done(), dur,
+                                  int(epoch[ue]), dc))
+            seq += 1
+            return True
+        if kind == LEAVE:
+            epoch[ue] += 1              # lazy-cancel the in-flight upload
+            adapter.on_leave(ue)
+            obs.CURRENT.add("driver.ue_departures")
+            return True
+        if kind == DRIFT:
+            changed = clients[ue].drift_labels(scen.rng,
+                                               cfg.scenario.drift_frac)
+            obs.CURRENT.add("driver.label_drifts")
+            if changed:
+                obs.CURRENT.add("driver.drifted_samples", changed)
+        elif kind == FLASH:
+            moved = adapter.on_flash(scen.hotspot_targets(), scen.rng)
+            if moved:
+                obs.CURRENT.add("driver.flash_retargets", moved)
+        return False
+
     def handle(result) -> None:
         nonlocal seq
         if recorder is not None:
@@ -480,7 +601,8 @@ def _event_loop(cfg: ExperimentConfig, model,
                 heap_depth=len(heap),
                 extras=adapter.result_extras(),
                 t_sim=t_now,
-                staleness=srv.history_staleness[-1])
+                staleness=srv.history_staleness[-1],
+                members=adapter.cell_membership())
             rep.debug(f"[trace] round {rec['round']} cell={rec['cell']} "
                       f"a={rec['a']} heap={rec['heap_depth']} "
                       f"wall={rec['wall_s']*1e3:.1f}ms")
@@ -512,7 +634,29 @@ def _event_loop(cfg: ExperimentConfig, model,
             rep.progress(f"[{name or algorithm}-{mode}]{cell} round {k:4d} "
                          f"t={t_now:8.2f}s ploss={p:.4f} gloss={g:.4f}")
 
-    while adapter.rounds_done() < max_rounds and heap:
+    inf = float("inf")
+
+    def events_remain() -> bool:
+        # a dry heap can only be refilled by a future join (can_spawn);
+        # departures/drift alone cannot restart progress
+        return bool(heap) or (scen is not None and scen.can_spawn())
+
+    while adapter.rounds_done() < max_rounds and events_remain():
+        # live-membership round-size caps are pushed between drains only
+        # (never mid-drain): ``need`` stays constant while a drain is in
+        # flight, preserving the drain invariant
+        adapter.pre_drain()
+        # a clamped target the pending uploads already meet can never be
+        # closed by a future arrival (every remaining member's upload is
+        # in) — close those rounds now, then re-arm the caps: the closes
+        # redistribute, changing both pending and in-flight counts
+        flushed = adapter.flush_ready()
+        if flushed:
+            for result in flushed:
+                handle(result)
+                if adapter.rounds_done() >= max_rounds:
+                    break
+            continue
         # ---- drain arrivals until the first cell would close its round ----
         # No distribution (hence no cancellation, no membership effect on
         # queued events) can occur before then, so every drained payload is
@@ -526,12 +670,31 @@ def _event_loop(cfg: ExperimentConfig, model,
         closing: Optional[int] = None
         redistributed.clear()
         stale_pops = 0
+        rearm = False       # drain ended on a membership change
         # NOTE: the pop loop itself carries no per-pop tracing calls — the
         # drain is the hot path and must stay free when tracing is off;
         # mobility/handover time is attributed inside the (rare) tick
-        # branch of ``multicell.advance_to``, not here
+        # branch of ``multicell.advance_to``, not here.  Scenario lifecycle
+        # events are interleaved in simulated-time order: each one is
+        # applied before any later-timestamped upload pops, so a departure
+        # always cancels in-flight work before that work could arrive.
         with obs.CURRENT.span("drain"):
-            while heap:
+            while True:
+                if not heap and (scen is None or not scen.can_spawn()):
+                    break
+                t_head = heap[0][0] if heap else inf
+                if scen is not None and scen.next_time() <= t_head:
+                    ev = scen.next_event(t_head)
+                    if ev is not None and apply_scenario_event(ev):
+                        # membership changed: end the drain so the live
+                        # caps re-arm (pre_drain / flush_ready) before
+                        # any further pops — mid-drain cap pushes would
+                        # break the drain invariant instead
+                        rearm = True
+                        break
+                    continue
+                if not heap:
+                    break
                 t, sq, ue, _version, dur, ev_epoch, cell = \
                     heapq.heappop(heap)
                 if ev_epoch != epoch[ue]:
@@ -549,6 +712,8 @@ def _event_loop(cfg: ExperimentConfig, model,
         if stale_pops:
             obs.CURRENT.add("driver.stale_pops", stale_pops)
         if not batch:
+            if rearm:
+                continue    # nothing drained yet; re-clamp and go again
             break
 
         held = [held_params[ue] for _, ue, _, _, _ in batch]
@@ -691,14 +856,44 @@ def _event_loop(cfg: ExperimentConfig, model,
     proto = adapter.protocol()
     jax.block_until_ready(jax.tree.leaves(proto.params))
 
+    # ---- aborted-round accounting -----------------------------------------
+    # An exit BEFORE the round target with uploads still pending means the
+    # event heap ran dry mid-round (e.g. A > live population, or a frozen
+    # per-cell A above a shrunken cell's membership).  This used to be
+    # silent — the run reported a clean SimResult and the held uploads
+    # simply vanished.  Count it, warn, and surface it on the result.
+    pending = adapter.pending_uploads()
+    aborted = adapter.open_rounds() \
+        if (adapter.rounds_done() < max_rounds and pending > 0) else 0
+    if aborted:
+        obs.CURRENT.add("driver.aborted_round", aborted)
+        rep.warn(f"[{name or f'{algorithm}-{mode}'}] event heap exhausted "
+                 f"with {pending} pending upload(s) across {aborted} open "
+                 f"round(s) — completed {adapter.rounds_done()}/"
+                 f"{max_rounds} rounds")
+
     telemetry = None
     if recorder is not None:
+        scen_extras = {} if scen is None else {
+            "ue_joins": scen.ue_joins, "ue_departures": scen.ue_departures,
+            "label_drifts": scen.label_drifts}
         telemetry = recorder.finalize(extras={
-            k: v for k, v in adapter.result_extras().items()
-            if isinstance(v, (int, np.integer))})
+            **{k: v for k, v in adapter.result_extras().items()
+               if isinstance(v, (int, np.integer))},
+            **scen_extras,
+            **({"aborted_rounds": aborted} if aborted else {})})
 
-    wait_frac = float(1.0 - busy_time.sum() / max(n * t_now, 1e-9))
+    # busy time over seconds of *existence*: a departed UE's absence is
+    # not idle time (the closed-world denominator n·t_now is reproduced
+    # exactly by alive_total when no churn events fired)
+    alive_s = scen.alive_total(t_now) if scen is not None else n * t_now
+    wait_frac = float(1.0 - busy_time.sum() / max(alive_s, 1e-9))
     return SimResult(
+        ue_joins=scen.ue_joins if scen is not None else 0,
+        ue_departures=scen.ue_departures if scen is not None else 0,
+        label_drifts=scen.label_drifts if scen is not None else 0,
+        aborted_rounds=aborted,
+        pending_uploads=pending,
         telemetry=telemetry,
         name=name or f"{algorithm}-{mode}",
         # simlint: disable-next=SIM202 -- final result assembly, host lists

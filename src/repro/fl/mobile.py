@@ -104,6 +104,13 @@ class MobileAdapter(TopologyAdapter):
         self._fl, self._mob, self._mode, self._n = fl, mob, mode, n
         self.hier: Optional[HierarchicalServer] = None
         self.server: Optional[SemiSyncServer] = None
+        # open-world scenario state (inert when cfg.scenario is off):
+        # adaptive per-cell A — clamp each cell's close threshold to live
+        # membership so a shrunken cell keeps closing rounds (the fix for
+        # the frozen-at-init-A live-lock)
+        self._scen = cfg.scenario
+        self._adaptive_a = cfg.scenario.enabled and cfg.scenario.adaptive_cell_a
+        self._active_mask: Optional[np.ndarray] = None
 
     # --- per-cell bandwidth (re-allocated lazily on membership change) -
     def bind_link_budget(self, z_bits: float, d_i: np.ndarray) -> None:
@@ -119,6 +126,10 @@ class MobileAdapter(TopologyAdapter):
     def _realloc(self, c: int) -> None:
         members = self.net.cell_members(c)
         if len(members) == 0:
+            # drop the theorem2 warm-start: the old membership's t_star is
+            # meaningless once the cell empties, and a re-populated cell
+            # must not seed its equal-finish bisection from it
+            self._t_star[c] = 0.0
             return
         budget = float(self.net.cell_bw[c])
         if self._bandwidth_policy == "optimal":
@@ -170,12 +181,18 @@ class MobileAdapter(TopologyAdapter):
             a_req = mob.cell_participants or max(
                 1, -(-fl.participants_per_round // mob.n_cells))
             members0 = [self.net.cell_members(c) for c in range(mob.n_cells)]
-            # cap each cell's A at its initial population: a cell holding
-            # fewer members than A could never close a round and would
-            # starve its UEs
+            # Legacy behaviour: cap each cell's A at its *initial*
+            # population, frozen for the whole run.  That prevents a
+            # never-closable round at t=0, but handovers/churn can still
+            # drop a cell below its frozen A later — it then starves its
+            # members forever.  The adaptive mode keeps the nominal A and
+            # clamps the effective close threshold to LIVE membership,
+            # re-pushed before every drain (``pre_drain``).
             cell_cfgs = [ServerConfig(
                 n_ues=n,
-                participants_per_round=max(1, min(a_req, max(len(m), 1))),
+                participants_per_round=(
+                    a_req if self._adaptive_a
+                    else max(1, min(a_req, max(len(m), 1)))),
                 staleness_bound=fl.staleness_bound, beta=fl.beta,
                 mode="semi", staleness_discount=fl.staleness_discount)
                 for m in members0]
@@ -184,11 +201,19 @@ class MobileAdapter(TopologyAdapter):
                 HierarchyConfig(n_cells=mob.n_cells,
                                 cloud_sync_every=mob.cloud_sync_every),
                 members0)
+            if self._adaptive_a:
+                self.pre_drain()        # clamp before the first drain too
         else:
             self.server = SemiSyncServer(params0, ServerConfig(
                 n_ues=n, participants_per_round=fl.participants_per_round,
                 staleness_bound=fl.staleness_bound, beta=fl.beta,
                 mode=self._mode, staleness_discount=fl.staleness_discount))
+            if self._active_mask is not None:
+                # dormant UEs must neither be distributed to nor appear
+                # stale: deactivate them in the flat server
+                self.server.ue_active[:] = self._active_mask
+                if self._adaptive_a:
+                    self.pre_drain()
 
     def rounds_done(self) -> int:
         return self.hier.edge_rounds if self.hier is not None \
@@ -200,8 +225,10 @@ class MobileAdapter(TopologyAdapter):
         return self.server.arrivals_until_round()
 
     def participants(self, cell: int) -> int:
-        return self.hier.cells[cell].a if self.hier is not None \
-            else self.server.a
+        # the EFFECTIVE round size (== A unless live-cap clamped): the
+        # fused-dispatch path batches exactly this many lanes
+        return self.hier.cells[cell].target if self.hier is not None \
+            else self.server.target
 
     def on_arrival(self, cell, ue, payload):
         if self.hier is not None:
@@ -254,6 +281,79 @@ class MobileAdapter(TopologyAdapter):
                 if c in self._dirty_cells:
                     self._realloc(c)
                     self._dirty_cells.discard(c)
+
+    # --- open-world scenario hooks -------------------------------------
+    def bind_active(self, mask: np.ndarray) -> None:
+        # shared reference: the scenario runtime flips bits in place and
+        # the network's membership queries see them immediately
+        self._active_mask = mask
+        self.net.active = mask
+
+    def pre_drain(self) -> None:
+        # cap = pending + in-flight: live members whose upload is already
+        # held can't produce another arrival before the close, so they
+        # are subtracted from the members that still can
+        if not self._adaptive_a:
+            return
+        counts = self.net.cell_counts()
+        if self.hier is not None:
+            for c in range(self.net.n_cells):
+                pend = self.hier.cells[c].pending_ue_set()
+                members = self.net.cell_members(c)
+                in_flight = int(sum(1 for u in members
+                                    if int(u) not in pend))
+                self.hier.set_live_cap(c, int(counts[c]), in_flight)
+        elif self.server is not None:
+            pend = self.server.pending_ue_set()
+            live = int(counts.sum())
+            live_pending = 0 if self._active_mask is None else \
+                sum(1 for u in pend if self._active_mask[u])
+            self.server.set_live_cap(live, live - live_pending)
+
+    def flush_ready(self):
+        if not self._adaptive_a:
+            return []
+        if self.hier is not None:
+            out = []
+            for c in range(self.net.n_cells):
+                res = self.hier.flush(c)
+                if res is not None:
+                    out.append(res)
+            return out
+        res = self.server.flush()
+        return [res] if res is not None else []
+
+    def on_join(self, ue: int):
+        cell = int(self.net.assoc[ue])
+        self._dirty_cells.add(cell)     # bandwidth re-split with the joiner
+        if self.hier is not None:
+            self.hier.join(ue, cell)
+            return self.hier.cells[cell].params
+        self.server.activate(ue)
+        return self.server.params
+
+    def on_leave(self, ue: int) -> None:
+        # net.active is the scenario's mask (already flipped); drop the
+        # leaver from its cell's membership bookkeeping + bandwidth split
+        self._dirty_cells.add(int(self.net.assoc[ue]))
+        if self.hier is not None:
+            self.hier.leave(ue)
+        else:
+            self.server.deactivate(ue)
+
+    def on_flash(self, idx: np.ndarray, rng: np.random.Generator) -> int:
+        hotspot = min(max(self._scen.flash_hotspot_cell, 0),
+                      self.net.n_cells - 1)
+        return self.net.retarget_waypoints(
+            idx, hotspot, self._wl.cell_radius_m / 4.0, rng)
+
+    def cell_membership(self):
+        if self._active_mask is None:
+            return None
+        counts = self.net.cell_counts()
+        if self.hier is not None:
+            return [int(c) for c in counts]
+        return [int(counts.sum())]
 
     def result_extras(self):
         return {

@@ -57,6 +57,11 @@ class StaticAdapter(TopologyAdapter):
             raise ValueError(f"unknown bandwidth policy {bandwidth_policy!r}")
         self._fl, self._mode, self._n = fl, mode, n
         self.server: Optional[SemiSyncServer] = None
+        # open-world scenario state (inert when cfg.scenario is off); the
+        # static drop has no mobility, so churn here is joins/leaves/drift
+        # over a frozen geometry (bandwidth keeps the drop-time split)
+        self._adaptive_a = cfg.scenario.enabled and cfg.scenario.adaptive_cell_a
+        self._active_mask: Optional[np.ndarray] = None
 
     # --- protocol ------------------------------------------------------
     def make_servers(self, params0) -> None:
@@ -65,6 +70,9 @@ class StaticAdapter(TopologyAdapter):
             n_ues=self._n, participants_per_round=fl.participants_per_round,
             staleness_bound=fl.staleness_bound, beta=fl.beta,
             mode=self._mode, staleness_discount=fl.staleness_discount))
+        if self._active_mask is not None:
+            self.server.ue_active[:] = self._active_mask
+            self.pre_drain()
 
     def rounds_done(self) -> int:
         return self.server.round
@@ -73,7 +81,8 @@ class StaticAdapter(TopologyAdapter):
         return self.server.arrivals_until_round()
 
     def participants(self, cell: int) -> int:
-        return self.server.a
+        # effective round size (== A unless clamped by the live cap)
+        return self.server.target
 
     def on_arrival(self, cell, ue, payload):
         return self.server.on_arrival(ue, payload)
@@ -86,6 +95,37 @@ class StaticAdapter(TopologyAdapter):
 
     def protocol(self):
         return self.server
+
+    # --- open-world scenario hooks -------------------------------------
+    def bind_active(self, mask: np.ndarray) -> None:
+        self._active_mask = mask        # shared with the scenario runtime
+
+    def pre_drain(self) -> None:
+        # cap = pending + in-flight (live members whose upload is already
+        # held can't produce another arrival before the close)
+        if self._adaptive_a and self._active_mask is not None:
+            live = int(self._active_mask.sum())
+            pend = self.server.pending_ue_set()
+            live_pending = sum(1 for u in pend if self._active_mask[u])
+            self.server.set_live_cap(live, live - live_pending)
+
+    def flush_ready(self):
+        if not (self._adaptive_a and self._active_mask is not None):
+            return []
+        res = self.server.flush()
+        return [res] if res is not None else []
+
+    def on_join(self, ue: int):
+        self.server.activate(ue)
+        return self.server.params
+
+    def on_leave(self, ue: int) -> None:
+        self.server.deactivate(ue)
+
+    def cell_membership(self):
+        if self._active_mask is None:
+            return None
+        return [int(self._active_mask.sum())]
 
 
 def run_simulation(cfg: ExperimentConfig, model, clients: List[ClientDataset],

@@ -134,6 +134,12 @@ class MultiCellNetwork(CounterFadingMixin):
     _anchor: np.ndarray = None        # [n, 2] position at last re-score
     _margin: np.ndarray = None        # [n] safe handover radius [m]
     _la_converged: bool = False       # load_aware best response at fixpoint
+    # open-world scenario: which UEs currently exist.  ``None`` (default,
+    # closed world) keeps every legacy code path untouched; when set,
+    # membership queries and handover events see only active UEs —
+    # positions/association still advance for everyone, so a dormant UE
+    # re-joins wherever its trajectory carried it.
+    active: np.ndarray = None         # [n_ues] bool, or None
 
     # ------------------------------------------------------------------
     @classmethod
@@ -255,10 +261,43 @@ class MultiCellNetwork(CounterFadingMixin):
     # cells
     # ------------------------------------------------------------------
     def cell_members(self, c: int) -> np.ndarray:
-        return np.nonzero(self.assoc == c)[0]
+        if self.active is None:
+            return np.nonzero(self.assoc == c)[0]
+        return np.nonzero((self.assoc == c) & self.active)[0]
 
     def cell_counts(self) -> np.ndarray:
-        return np.bincount(self.assoc, minlength=self.n_cells)
+        if self.active is None:
+            return np.bincount(self.assoc, minlength=self.n_cells)
+        return np.bincount(self.assoc[self.active],
+                           minlength=self.n_cells)
+
+    # ------------------------------------------------------------------
+    # open-world scenario hooks
+    # ------------------------------------------------------------------
+    def set_active(self, ue: int, flag: bool) -> None:
+        """Flip one UE's existence bit (lazily materialises the mask)."""
+        if self.active is None:
+            self.active = np.ones(self.n_ues, dtype=bool)
+        self.active[ue] = flag
+
+    def retarget_waypoints(self, idx: np.ndarray, cell: int,
+                           spread_m: float,
+                           rng: np.random.Generator) -> int:
+        """Flash crowd: point the random waypoints of ``idx`` at a spot
+        near BS ``cell`` — their next legs converge on the hotspot.  Draws
+        from the caller's ``rng`` (the scenario stream), never from
+        ``mob_rng``, so the mobility draw schedule of every other UE is
+        untouched.  No-op (returns 0) for mobility models without
+        waypoint state."""
+        wp = self._mob_state.get("waypoint")
+        if wp is None or len(idx) == 0:
+            return 0
+        tgt = self.bs_xy[cell] + rng.normal(0.0, spread_m,
+                                            size=(len(idx), 2))
+        np.clip(tgt[:, 0], self.area.xmin, self.area.xmax, out=tgt[:, 0])
+        np.clip(tgt[:, 1], self.area.ymin, self.area.ymax, out=tgt[:, 1])
+        wp[idx] = tgt
+        return len(idx)
 
     # ------------------------------------------------------------------
     # time
@@ -294,6 +333,11 @@ class MultiCellNetwork(CounterFadingMixin):
         with tr.span("reassociate"):
             new_assoc = self._reassociate()
         moved = np.nonzero(new_assoc != self.assoc)[0]
+        if self.active is not None:
+            # dormant UEs keep moving and re-associating silently — no
+            # handover events (they are nobody's member) and no count;
+            # a later join simply finds them in their current cell
+            moved = moved[self.active[moved]]
         events = [(int(u), int(self.assoc[u]), int(new_assoc[u]))
                   for u in moved]
         self.handovers += len(events)

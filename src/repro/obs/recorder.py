@@ -81,10 +81,16 @@ class RoundRecorder:
     # ------------------------------------------------------------------
     def on_round(self, *, result: Dict[str, Any], ues: np.ndarray,
                  heap_depth: int, extras: Dict[str, Any], t_sim: float,
-                 staleness: np.ndarray) -> Dict[str, Any]:
+                 staleness: np.ndarray,
+                 members: Optional[List[int]] = None) -> Dict[str, Any]:
         """Record the round ``result`` just returned by the protocol;
         ``ues``/``staleness`` are read off the closing server's Π /
         staleness history (observability never writes protocol state).
+
+        ``members`` — live per-protocol-cell membership counts under an
+        open-world scenario; recorded as the OPTIONAL ``cell_members``
+        key (closed-world traces omit it, so existing traces stay valid
+        against the v1 schema).
 
         The record's wall/phase deltas cover everything since the
         previous close (including that round's redistribution and eval) —
@@ -117,6 +123,8 @@ class RoundRecorder:
             - self._extras_mark.get("cloud_rounds", 0),
             "counts": _delta_map(snap["counts"], self._mark["counts"]),
         }
+        if members is not None:
+            rec["cell_members"] = [int(m) for m in members]
         self._t_last = now
         self._mark = snap
         self._eng_mark = eng
@@ -224,6 +232,12 @@ def validate_rows(rows: List[Dict[str, Any]],
                         f"exceed wall {r['wall_s']:.6f}")
         if sum(r["staleness_hist"]) <= 0:
             errs.append(f"record {i}: empty staleness histogram")
+        if "cell_members" in r:        # optional (open-world scenarios)
+            cm = r["cell_members"]
+            if not isinstance(cm, list) or any(
+                    not isinstance(v, int) or v < 0 for v in cm):
+                errs.append(f"record {i}: cell_members must be a list of "
+                            f"non-negative ints, got {cm!r}")
     if summary is None:
         errs.append("missing _summary trailer row")
     elif recs:

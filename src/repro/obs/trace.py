@@ -283,6 +283,12 @@ class Reporter:
     def _emit(self, msg: str) -> None:
         print(msg, file=self.stream or sys.stdout, flush=True)
 
+    def warn(self, msg: str) -> None:
+        """Anomaly reporting (aborted rounds, invariant near-misses):
+        emitted at every level including ``quiet`` — losing work silently
+        is exactly the failure mode this exists to surface."""
+        self._emit(f"WARNING: {msg}")
+
     def progress(self, msg: str) -> None:
         if self.level >= _LEVELS["progress"]:
             self._emit(msg)

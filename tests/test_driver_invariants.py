@@ -23,7 +23,8 @@ except ImportError:                       # clean container (tier-1)
     from repro.utils.hypofallback import (HealthCheck, given, settings,
                                           strategies as st)
 
-from repro.config import ExperimentConfig, FLConfig, MobilityConfig
+from repro.config import (ExperimentConfig, FLConfig, MobilityConfig,
+                          ScenarioConfig)
 from repro.configs import get_config
 from repro.data import partition_noniid, synthetic_mnist
 from repro.fl.driver import run_event_loop
@@ -175,3 +176,122 @@ def test_handovers_actually_exercised():
         _check_invariants(adapter, res)
         total += res.handovers
     assert total >= 1
+
+
+# ---------------------------------------------------------------------------
+# open-world churn lifecycle invariants (randomized join/leave traces)
+# ---------------------------------------------------------------------------
+
+class ChurnAdapter(InstrumentedAdapter):
+    """Adds UE-lifecycle checks: no distribution may resurrect a departed
+    UE (the mask is exact at close time — every applied event predates the
+    closing pop), and arrivals from departed UEs are bounded by the number
+    of departures.  The bound exists because an upload that finished
+    BEFORE its UE left (same drain, earlier simulated time) legitimately
+    feeds after the leave flipped the mask; each departure strands at most
+    one such in-flight upload, so a zombie UE that keeps computing after
+    leaving (e.g. via a mid-flight handover restart) blows the bound."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        self.resurrections: list = []
+        self.ghost_arrivals: list = []
+
+    def _record(self, cell: int, ue: int) -> None:
+        super()._record(cell, ue)
+        if self._active_mask is not None and not self._active_mask[ue]:
+            self.ghost_arrivals.append(ue)
+
+    def _check_distribute(self, res):
+        if res is not None and self._active_mask is not None:
+            for u in res["distribute"]:
+                if not self._active_mask[u]:
+                    self.resurrections.append(("distribute", int(u)))
+        return res
+
+    def on_arrival(self, cell, ue, payload):
+        return self._check_distribute(super().on_arrival(cell, ue, payload))
+
+    def on_arrival_batch(self, cells, ues, payloads):
+        return self._check_distribute(
+            super().on_arrival_batch(cells, ues, payloads))
+
+    def on_round_batch(self, cell, ues, aggregate_fn):
+        return self._check_distribute(
+            super().on_round_batch(cell, ues, aggregate_fn))
+
+    def flush_ready(self):
+        return [self._check_distribute(r) for r in super().flush_ready()]
+
+
+def _run_churn(seed: int, arrival: float, departure: float,
+               rounds: int = 6):
+    cfg = ExperimentConfig(
+        model=get_config("mnist_dnn"),
+        fl=FLConfig(n_ues=N_UES, participants_per_round=4, staleness_bound=5,
+                    alpha=0.03, beta=0.07, inner_batch=4, outer_batch=4,
+                    hessian_batch=4, first_order=True, eta_mode="distance"),
+        mobility=MobilityConfig(
+            enabled=True, model="random_waypoint", speed_mps=30.0,
+            n_cells=3, hierarchy=True, cell_participants=2,
+            cloud_sync_every=3, step_s=0.1),
+        scenario=ScenarioConfig(
+            enabled=True, initial_active_frac=0.8,
+            arrival_rate=arrival, departure_rate=departure,
+            min_active=2, horizon_s=50.0))
+    clients = partition_noniid(_DATA, N_UES, n_labels=4, seed=seed)
+    adapter = ChurnAdapter(cfg, N_UES, seed=seed,
+                           bandwidth_policy="equal", mode="semi")
+    res = run_event_loop(cfg, _MODEL, clients, adapter, algorithm="perfed",
+                         mode="semi", max_rounds=rounds, eval_every=0,
+                         seed=seed)
+    return adapter, res
+
+
+def _check_churn_invariants(adapter: ChurnAdapter, res) -> None:
+    hier = adapter.hier
+    # no resurrection: every distribution target was alive at close time,
+    # and departed-UE arrivals (uploads that finished before the leave in
+    # the same drain) never exceed one per departure
+    assert adapter.resurrections == []
+    assert len(adapter.ghost_arrivals) <= res.ue_departures
+    # arrival conservation under churn: every fed arrival was consumed by
+    # a closed round (Π row sums count the ACTUAL arrivals of clamped
+    # rounds, not the nominal A) or is still pending at exit
+    consumed = sum(int(r.sum()) for r in hier.history_pi)
+    assert adapter.n_arrivals == consumed + hier.pending_uploads()
+    assert res.pending_uploads == (hier.pending_uploads()
+                                   if res.aborted_rounds else
+                                   res.pending_uploads)
+    # clamped rounds stay within [1, nominal A] per cell
+    for row, cell in zip(hier.history_pi, hier.history_cell):
+        assert 1 <= int(row.sum()) <= hier.cells[cell].a
+    # drain targets stayed positive (flush closes met-target rounds
+    # before any drain starts)
+    assert adapter.min_need >= 1
+    # churn counters surface on the result
+    assert res.ue_joins >= 0 and res.ue_departures >= 0
+    assert 0.0 <= res.wait_fraction <= 1.0
+
+
+@given(st.integers(0, 5),
+       st.sampled_from([0.0, 1.0, 4.0]),       # joins / sim-s
+       st.sampled_from([0.2, 1.0]))            # per-UE departure hazard
+@settings(max_examples=6, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_lifecycle_invariants_under_random_churn_traces(seed, arrival,
+                                                        departure):
+    adapter, res = _run_churn(seed, arrival, departure)
+    _check_churn_invariants(adapter, res)
+
+
+def test_churn_actually_exercised():
+    """The randomized sweep must include traces with real joins AND real
+    departures — otherwise the lifecycle invariants above pin nothing."""
+    joins = departures = 0
+    for seed in range(3):
+        adapter, res = _run_churn(seed, 4.0, 0.5)
+        _check_churn_invariants(adapter, res)
+        joins += res.ue_joins
+        departures += res.ue_departures
+    assert joins >= 1 and departures >= 1
